@@ -1,0 +1,79 @@
+"""Sec. VI-D: CoNLoCNN vs CAxCNN (reduced-precision CSD baseline).
+
+CAxCNN's best conversion (exhaustive search) over the 1-non-zero-digit
+CA representation = nearest-neighbour on {0, ±2^s} levels (17 levels,
+5 bits/weight). CoNLoCNN uses ELP_BSD{SF,[1̄,0..7]} (16 levels, 4
+bits/weight, no zero) + Algorithm 1. Paper: CoNLoCNN wins by ~4.5%
+top-1 on AlexNet (and needs one bit fewer per weight).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.core import FORMAT_A, ca_levels
+from repro.core.compensate import compensate_tensor
+from repro.core.methodology import quantize_model
+from repro.core.quantize import QuantizedTensor, nn_quantize, scale_factor
+from repro.models import cnn
+
+
+def quantize_ca(params, group_axes, compensate=False):
+    out = {}
+    for name, w in params.items():
+        if name.endswith("_b"):
+            out[name] = w
+            continue
+        sf = scale_factor(w, FORMAT_A)  # same max-alignment rule
+        levels = ca_levels(3) * sf
+        vals, idx = nn_quantize(w, levels)
+        qt = QuantizedTensor(values=vals, level_idx=idx, sf=sf, levels=levels)
+        if compensate:
+            qt = compensate_tensor(w, qt, group_axes[name])
+        out[name] = qt.values
+    return out
+
+
+def _logit_mse(spec, base_params, q_params, seed=0):
+    """Output-fidelity metric: MSE of logits vs the fp32 network."""
+    from repro.data.pipeline import CnnDataset
+
+    ds = CnnDataset(spec.input_hw, spec.input_ch, common.N_CLASSES, common.BATCH, seed=seed)
+    x, _ = ds.np_batch(77_000)
+    lb = cnn.forward(base_params, spec, jnp.asarray(x))
+    lq = cnn.forward(q_params, spec, jnp.asarray(x))
+    return float(jnp.mean(jnp.square(lb - lq)))
+
+
+def run(spec=cnn.ALEXNET_MINI):
+    params = common.train_mini_cnn(spec)
+    # hard-margin eval: same task, lower SNR, so quantization noise shows
+    eval_fn = common.make_eval_fn(spec, amp=0.45)
+    ga = cnn.weight_group_axes(params)
+    base = eval_fn(params, None)
+    cax_w = quantize_ca(params, ga, compensate=False)
+    cax = eval_fn(cax_w, 8)
+    conlo_w, _ = quantize_model(params, ga, FORMAT_A, compensate=True)
+    conlo = eval_fn(conlo_w, 8)
+    return {
+        "baseline": base,
+        "caxcnn_5b": cax,
+        "conlocnn_4b": conlo,
+        "mse_cax": _logit_mse(spec, params, cax_w),
+        "mse_conlo": _logit_mse(spec, params, conlo_w),
+    }
+
+
+def main() -> None:
+    r = run()
+    common.emit(
+        "caxcnn_compare",
+        0.0,
+        f"baseline={r['baseline']:.4f};caxcnn_ca1_5b={r['caxcnn_5b']:.4f};"
+        f"conlocnn_a4_4b={r['conlocnn_4b']:.4f};delta={r['conlocnn_4b'] - r['caxcnn_5b']:+.4f};"
+        f"logit_mse_cax={r['mse_cax']:.4f};logit_mse_conlo={r['mse_conlo']:.4f}",
+    )
+
+
+if __name__ == "__main__":
+    main()

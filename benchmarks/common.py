@@ -1,0 +1,97 @@
+"""Shared benchmark plumbing: trained mini-CNN, eval fns, CSV helpers.
+
+The paper's experiments need a *trained* network to quantize. ImageNet
+is unavailable offline, so the repro trains the mini variants of the
+paper's families (AlexNet-/VGG-style, see models/cnn.py) on the
+deterministic synthetic classification task until they are clearly
+above chance, then caches the weights under benchmarks/results/ so all
+figure benchmarks quantize the SAME baseline model.
+"""
+from __future__ import annotations
+
+import functools
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.pipeline import CnnDataset
+from repro.models import cnn
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+N_CLASSES = 10
+EVAL_BATCHES = 8
+BATCH = 128
+
+
+def _ckpt_path(spec_name: str) -> str:
+    return os.path.join(RESULTS, f"{spec_name}_trained.npz")
+
+
+def train_mini_cnn(spec: cnn.CnnSpec, steps: int = 1200, lr: float = 2e-2, seed: int = 0):
+    """Train (or load cached) mini CNN on the synthetic task (momentum SGD)."""
+    os.makedirs(RESULTS, exist_ok=True)
+    path = _ckpt_path(spec.name)
+    if os.path.exists(path):
+        arrs = np.load(path)
+        return {k: jnp.asarray(v) for k, v in arrs.items()}
+
+    ds = CnnDataset(spec.input_hw, spec.input_ch, N_CLASSES, BATCH, seed=seed)
+    params = cnn.init_params(spec, jax.random.PRNGKey(seed))
+    mom = jax.tree.map(jnp.zeros_like, params)
+
+    @jax.jit
+    def step(p, m, x, y):
+        loss, g = jax.value_and_grad(cnn.loss_fn)(p, spec, x, y)
+        m = jax.tree.map(lambda mm, gw: 0.9 * mm + gw, m, g)
+        return loss, jax.tree.map(lambda w, mm: w - lr * mm, p, m), m
+
+    for i in range(steps):
+        x, y = ds.np_batch(i)
+        loss, params, mom = step(params, mom, jnp.asarray(x), jnp.asarray(y))
+    np.savez(path, **{k: np.asarray(v) for k, v in params.items()})
+    return params
+
+
+def make_eval_fn(spec: cnn.CnnSpec, seed: int = 0, amp: float | None = None):
+    """eval_fn(weights, act_bits) -> accuracy on held-out batches.
+
+    Same seed as training (the class-templates define the task and must
+    match); held-out-ness comes from disjoint batch indices. ``amp``
+    below the training amplitude yields a hard-margin eval where
+    quantization noise is visible before total collapse.
+    """
+    ds = CnnDataset(spec.input_hw, spec.input_ch, N_CLASSES, BATCH, seed=seed)
+    if amp is not None:
+        ds.amp = amp
+    batches = [ds.np_batch(10_000 + i) for i in range(EVAL_BATCHES)]
+
+    @functools.partial(jax.jit, static_argnums=(1,))
+    def acc(params, act_bits, x, y):
+        logits = cnn.forward(params, spec, x, act_bits=act_bits)
+        return jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+
+    def eval_fn(params, act_bits=None):
+        return float(
+            np.mean([acc(params, act_bits, jnp.asarray(x), jnp.asarray(y)) for x, y in batches])
+        )
+
+    return eval_fn
+
+
+def timed(fn, *args, warmup: int = 1, iters: int = 5) -> float:
+    """Median wall-clock microseconds per call (jits + blocks)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def emit(name: str, us: float, derived: str) -> None:
+    print(f"{name},{us:.1f},{derived}")

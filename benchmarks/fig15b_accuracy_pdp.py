@@ -1,0 +1,84 @@
+"""Fig. 15(b): accuracy vs PDP for the four Table II ELP_BSD formats.
+
+For each format × activation bit-width (8..4) quantize the trained CNN
+with the full Sec. V methodology (SF → TQL → NN → Algorithm 1), measure
+accuracy, and compute the PE energy (PDP per MAC × network MACs) from
+the Table II model. Paper claims: even the most power-hungry CoNLoCNN
+PE gives ~50% PDP reduction vs conventional; ~76% if 1.44% accuracy
+drop is acceptable.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import TABLE2_FORMATS, pdp_fj
+from repro.core.methodology import quantize_model
+from repro.models import cnn
+
+
+def run(spec=cnn.ALEXNET_MINI, act_bits_range=(8, 7, 6, 5, 4)) -> list[dict]:
+    params = common.train_mini_cnn(spec)
+    eval_fn = common.make_eval_fn(spec)
+    group_axes = cnn.weight_group_axes(params)
+    base = eval_fn(params, None)
+    macs = spec.macs()
+    rows = []
+    for fmt in TABLE2_FORMATS:
+        qw, _ = quantize_model(params, group_axes, fmt, compensate=True)
+        for ab in act_bits_range:
+            acc = eval_fn(qw, ab)
+            pdp = pdp_fj(fmt.name, ab)
+            rows.append(
+                {
+                    "format": fmt.name,
+                    "act_bits": ab,
+                    "accuracy": acc,
+                    "acc_drop": base - acc,
+                    "pdp_fj": pdp,
+                    "energy_uj": macs * pdp * 1e-9,
+                }
+            )
+    for name in ("booth_mac", "conventional_fp"):
+        rows.append(
+            {
+                "format": name,
+                "act_bits": 8,
+                "accuracy": base,
+                "acc_drop": 0.0,
+                "pdp_fj": pdp_fj(name, 8),
+                "energy_uj": macs * pdp_fj(name, 8) * 1e-9,
+            }
+        )
+    return rows
+
+
+def main() -> None:
+    rows = run()
+    conv = next(r for r in rows if r["format"] == "conventional_fp")
+    for r in rows:
+        red = 1.0 - r["pdp_fj"] / conv["pdp_fj"]
+        common.emit(
+            f"fig15b_{r['format']}_a{r['act_bits']}",
+            0.0,
+            f"acc={r['accuracy']:.4f};drop={r['acc_drop']:+.4f};pdp_fj={r['pdp_fj']:.1f};pdp_red={red:.3f}",
+        )
+    # headline claims
+    worst = max((r for r in rows if r["format"].startswith("elp")), key=lambda r: r["pdp_fj"])
+    common.emit(
+        "fig15b_claim_50pct",
+        0.0,
+        f"most_power_hungry={worst['format']}@{worst['act_bits']}b;pdp_red_vs_conv={1 - worst['pdp_fj'] / conv['pdp_fj']:.3f}",
+    )
+    ok = [r for r in rows if r["format"].startswith("elp") and r["acc_drop"] <= 0.0144 + 1e-9]
+    if ok:
+        best = min(ok, key=lambda r: r["pdp_fj"])
+        common.emit(
+            "fig15b_claim_76pct",
+            0.0,
+            f"best_within_1.44pct={best['format']}@{best['act_bits']}b;pdp_red={1 - best['pdp_fj'] / conv['pdp_fj']:.3f}",
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Kernel microbenchmark: fused ELP_BSD decode-matmul vs bf16 matmul.
+
+On this CPU container the Pallas kernel runs in interpret mode (wall
+time is NOT TPU-representative); the meaningful derived numbers are the
+HBM weight-byte ratios, which are exact, plus XLA-path wall times as a
+relative consistency signal.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import FORMAT_A, FORMAT_C
+from repro.kernels.ops import pack_weight, quantized_matmul
+
+SHAPES = [(256, 2048, 2048), (128, 4096, 4096)]
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    for m, k, n in SHAPES:
+        x = jnp.asarray(rng.normal(size=(m, k)), jnp.bfloat16)
+        w = jnp.asarray(rng.normal(size=(k, n)) * 0.02, jnp.float32)
+        wb = jnp.asarray(w, jnp.bfloat16)
+
+        base = jax.jit(lambda a, b: (a @ b).astype(jnp.bfloat16))
+        t_base = common.timed(base, x, wb)
+
+        for fmt in (FORMAT_A, FORMAT_C):
+            pw, _ = pack_weight(w, fmt, compensate=False)
+            t_xla = common.timed(
+                lambda a, p=pw: quantized_matmul(a, p, impl="xla", out_dtype=jnp.bfloat16), x
+            )
+            ratio = (k * n * 2) / pw.nbytes
+            common.emit(
+                f"kernel_{fmt.name}_{m}x{k}x{n}",
+                t_xla,
+                f"bf16_us={t_base:.0f};hbm_weight_ratio={ratio:.1f}x;"
+                f"weight_bytes={pw.nbytes};bf16_bytes={k * n * 2}",
+            )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,99 @@
+"""Beyond-paper: ELP_BSD post-training quantization of an LM.
+
+Trains a small decoder LM on the synthetic stream, then quantizes all
+matmul weights with ELP_BSD (per-row compensation groups, DESIGN.md §4)
+and measures the eval-loss delta with vs without Algorithm 1 — the LM
+analogue of Fig. 15(a), validating that the compensation transfers from
+conv channels to contracting-dim rows.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.configs.base import ArchConfig
+from repro.core import FORMAT_A, FORMAT_C
+from repro.core.methodology import quantize_model
+from repro.data.pipeline import LmDataset
+from repro.models import transformer as T
+from repro.runtime.train_loop import TrainSetup, train
+
+CFG = ArchConfig(
+    name="lm-ptq", family="dense", n_layers=4, d_model=128, n_heads=4,
+    n_kv_heads=2, d_ff=256, vocab=256, head_dim=32, dtype_str="float32",
+)
+
+
+def _flat(tree, prefix=""):
+    out = {}
+    for k, v in tree.items():
+        if isinstance(v, dict):
+            out.update(_flat(v, prefix + k + "/"))
+        else:
+            out[prefix + k] = v
+    return out
+
+
+def _unflat(flat):
+    out = {}
+    for k, v in flat.items():
+        parts = k.split("/")
+        d = out
+        for p in parts[:-1]:
+            d = d.setdefault(p, {})
+        d[parts[-1]] = v
+    return out
+
+
+def run():
+    res = train(
+        TrainSetup(cfg=CFG, mesh=None, lr_peak=3e-3, warmup=20, total_steps=200, remat=False),
+        steps=200, batch_size=16, seq_len=64, log_every=1000, log_fn=lambda s: None,
+    )
+    params = res["params"]
+    ds = LmDataset(CFG, seq_len=64, batch=16, seed=123)
+    batches = [ds.np_batch(50_000 + i) for i in range(4)]
+
+    @jax.jit
+    def eval_loss(p):
+        tot = 0.0
+        for b in batches:
+            tot += T.loss_fn(p, CFG, jnp.asarray(b["tokens"]), jnp.asarray(b["labels"]), remat=False)
+        return tot / len(batches)
+
+    base = float(eval_loss(params))
+    flat = _flat(params)
+    # group-axis ablation: compensate over the contracting rows
+    # (activation-correlation analogue) vs the output columns (no
+    # correlation argument) — the paper's Fig. 8 predicts neither helps
+    # much for LMs, and row should be >= column.
+    ga_row = {k: (w.ndim - 2,) for k, w in flat.items() if w.ndim >= 2}
+    ga_col = {k: (w.ndim - 1,) for k, w in flat.items() if w.ndim >= 2}
+    out = {}
+    for fmt in (FORMAT_A, FORMAT_C):
+        qp, _ = quantize_model(flat, ga_row, fmt, compensate=False)
+        qr, _ = quantize_model(flat, ga_row, fmt, compensate=True)
+        qc, _ = quantize_model(flat, ga_col, fmt, compensate=True)
+        out[fmt.name] = {
+            "plain": float(eval_loss(_unflat(qp))),
+            "comp_row": float(eval_loss(_unflat(qr))),
+            "comp_col": float(eval_loss(_unflat(qc))),
+        }
+    return base, out
+
+
+def main() -> None:
+    base, out = run()
+    for fmt, r in out.items():
+        common.emit(
+            f"lm_ptq_{fmt}",
+            0.0,
+            f"fp_loss={base:.4f};plain={r['plain']:.4f};comp_row={r['comp_row']:.4f};"
+            f"comp_col={r['comp_col']:.4f};row_gain={r['plain'] - r['comp_row']:+.4f}",
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""Aggregate dry-run JSONs into the §Roofline table (markdown + CSV).
+
+Reads benchmarks/results/dryrun/*.json (written by launch.dryrun),
+prints the per-(arch × shape × mesh) three-term roofline with
+bottleneck, useful-FLOP ratio, per-device memory, and one-line
+what-would-move-the-dominant-term-down notes; flags hillclimb
+candidates (worst roofline fraction / most collective-bound / most
+paper-representative).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+HERE = os.path.dirname(__file__)
+DRYRUN = os.path.join(HERE, "results", "dryrun")
+
+NOTES = {
+    "collective": "reduce activation all-reduces: sequence-parallel residuals + reduce-scatter/all-gather pairs; bf16 collectives",
+    "memory": "cut HBM bytes: ELP_BSD-packed weights (serve), smaller remat stash / sharded activations (train)",
+    "compute": "raise MXU utilization: larger per-device tiles, fewer pad/transpose ops",
+}
+
+
+def load(pattern: str = "*.json") -> list[dict]:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN, pattern))):
+        d = json.load(open(f))
+        if d.get("status") == "ok" and "roofline" in d:
+            rows.append(d)
+    return rows
+
+
+def fraction(row: dict) -> float:
+    """Compute-roofline fraction = compute term / dominant term."""
+    r = row["roofline"]
+    return r["compute_s"] / max(r["total_s"], 1e-30)
+
+
+def table(rows: list[dict], quant: str | None = "none") -> str:
+    out = [
+        "| arch | shape | mesh | quant | compute s | memory s | collective s | bottleneck | roofline frac | 6ND/HLO | mem/dev GiB |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for d in rows:
+        if quant is not None and d.get("quant", "none") != quant:
+            continue
+        if d.get("flash") or d.get("seqp"):
+            continue  # §Perf variants are reported separately
+        r = d["roofline"]
+        m = d["memory"]
+        out.append(
+            "| {arch} | {shape} | {mesh} | {q} | {c:.4f} | {m:.4f} | {k:.4f} | {b} | {f:.3f} | {u:.3f} | {g:.1f} |".format(
+                arch=d["arch"],
+                shape=d["shape"],
+                mesh=d["mesh"],
+                q=d.get("quant", "none"),
+                c=r["compute_s"],
+                m=r["memory_s"],
+                k=r["collective_s"],
+                b=r["bottleneck"],
+                f=fraction(d),
+                u=r["useful_flop_ratio"],
+                g=(m["argument_bytes"] + m["temp_bytes_tpu_adjusted"]) / 2**30,
+            )
+        )
+    return "\n".join(out)
+
+
+def candidates(rows: list[dict]) -> dict:
+    single = [d for d in rows if d["mesh"] == "16x16" and d.get("quant", "none") == "none"]
+    worst = min(single, key=fraction)
+    coll = max(single, key=lambda d: d["roofline"]["collective_s"] / max(d["roofline"]["total_s"], 1e-30))
+    return {"worst_fraction": worst, "most_collective_bound": coll}
+
+
+def main() -> None:
+    rows = load()
+    print(table(rows))
+    c = candidates(rows)
+    print()
+    for tag, d in c.items():
+        print(
+            f"hillclimb[{tag}]: {d['arch']} × {d['shape']} "
+            f"(frac={fraction(d):.3f}, bottleneck={d['roofline']['bottleneck']})"
+        )
+    print("hillclimb[paper-representative]: kimi_k2_1t_a32b × decode_32k (weight-memory-bound; ELP_BSD target)")
+    print()
+    print("dominant-term notes:")
+    for b, note in NOTES.items():
+        print(f"  {b}: {note}")
+
+
+if __name__ == "__main__":
+    main()

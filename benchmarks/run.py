@@ -1,0 +1,48 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  fig15a_*   — Fig. 15(a) error-compensation effectiveness
+  fig15b_*   — Fig. 15(b) accuracy vs PDP for Table II ELP_BSD formats
+  table2_*   — Table II MAC characteristics + network energy model
+  caxcnn_*   — Sec. VI-D comparison vs CAxCNN
+  kernel_*   — fused decode-matmul microbench (HBM byte ratios)
+  lm_ptq_*   — beyond-paper: LM weight PTQ with row-group compensation
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        caxcnn_compare,
+        fig15a_error_comp,
+        fig15b_accuracy_pdp,
+        kernel_bench,
+        lm_ptq,
+        table2_energy,
+    )
+
+    print("name,us_per_call,derived")
+    failed = []
+    for mod in (
+        table2_energy,
+        fig15a_error_comp,
+        fig15b_accuracy_pdp,
+        caxcnn_compare,
+        kernel_bench,
+        lm_ptq,
+    ):
+        try:
+            mod.main()
+        except Exception:  # noqa: BLE001
+            failed.append(mod.__name__)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Table II: MAC/PE characteristics and network-level energy model.
+
+Reprints the synthesized numbers, derives the paper's headline ratios,
+and extends them to network-level energy (compute + DRAM weight
+traffic) for full-size AlexNet / VGG-16, where the packed ELP_BSD
+bit-widths (4/7/6/6) also shrink the memory term — the part that maps
+to the TPU adaptation's HBM saving.
+"""
+from __future__ import annotations
+
+from benchmarks import common
+from repro.core import PRESET_FORMATS, network_energy_nj, pdp_fj, pdp_reduction, storage_bytes
+from repro.core.energy import TABLE2
+from repro.models.cnn import ALEXNET, VGG16
+
+
+def main() -> None:
+    for (name, ab), pt in TABLE2.items():
+        common.emit(
+            f"table2_{name}_a{ab}",
+            0.0,
+            f"area={pt.area_cells};power_uW={pt.power_uw};delay_ns={pt.delay_ns};pdp_fJ={pt.pdp_fj}",
+        )
+    # Headline ratios (Sec. VI-C)
+    common.emit(
+        "table2_claim_most_power_hungry_vs_booth",
+        0.0,
+        f"b7@8_vs_booth={1 - pdp_fj('elp_bsd_b7', 8) / pdp_fj('booth_mac', 8):.3f}",
+    )
+    common.emit(
+        "table2_claim_76pct_vs_conventional",
+        0.0,
+        f"c6@5_vs_conv={pdp_reduction('elp_bsd_c6', 5):.3f}",
+    )
+    # Network-level energy (full-size nets, weight-stationary dataflow)
+    for spec in (ALEXNET, VGG16):
+        macs = spec.macs()
+        n_params = _param_count(spec)
+        for fmt_name in ("elp_bsd_a4", "elp_bsd_c6", "conventional_fp"):
+            fmt = PRESET_FORMATS.get(fmt_name)
+            wb = storage_bytes(n_params, fmt) if fmt else n_params  # 8-bit baseline
+            e = network_energy_nj(macs, wb, fmt_name, 8)
+            common.emit(
+                f"table2_net_{spec.name}_{fmt_name}",
+                0.0,
+                f"macs={macs};weight_MB={wb / 1e6:.1f};compute_uJ={e['compute_nj'] / 1e3:.1f};"
+                f"mem_uJ={e['memory_nj'] / 1e3:.1f};total_uJ={e['total_nj'] / 1e3:.1f}",
+            )
+
+
+def _param_count(spec) -> int:
+    from repro.models.cnn import Conv, Fc, Pool
+
+    ch, hw, total = spec.input_ch, spec.input_hw, 0
+    for l in spec.layers:
+        if isinstance(l, Conv):
+            total += l.k * l.k * ch * l.ch
+            ch = l.ch
+            hw //= l.stride
+        elif isinstance(l, Pool):
+            hw //= l.stride
+        elif isinstance(l, Fc):
+            total += (hw * hw * ch if hw else ch) * l.out
+            hw = 0
+            ch = l.out
+    return total
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Quickstart: CoNLoCNN conversion of a trained CNN in ~40 lines.
+
+Trains the mini AlexNet on the synthetic task, runs the full Sec. V
+methodology (critical activation bit-width search → per-layer SF → TQL
+→ nearest-neighbour quantization → Algorithm 1 error compensation →
+accuracy-constraint loop), and reports accuracy, compression, and the
+Table II energy estimate.
+
+Run:  PYTHONPATH=src:. python examples/quickstart.py
+"""
+from benchmarks import common
+from repro.core import FORMAT_A, convert, network_energy_nj
+from repro.models import cnn
+
+
+def main() -> None:
+    spec = cnn.ALEXNET_MINI
+    print(f"training {spec.name} on the synthetic task ...")
+    params = common.train_mini_cnn(spec)
+    eval_fn = common.make_eval_fn(spec)
+
+    print("converting with ELP_BSD{SF, s[0..7]} (4 bits/weight) + Algorithm 1 ...")
+    result = convert(
+        params,
+        cnn.weight_group_axes(params),
+        FORMAT_A,
+        lambda w, ab: eval_fn(w, ab),
+        ac=0.01,
+        bw_max=8,
+        bw_min=4,
+    )
+    print(f"  baseline accuracy : {result.baseline_accuracy:.4f}")
+    print(f"  quantized accuracy: {result.accuracy:.4f} (loss {result.accuracy_loss:+.4f})")
+    print(f"  activation bits   : {result.act_bits}")
+    print(f"  weight compression: {result.compression:.1f}x "
+          f"({result.raw_bytes} -> {result.encoded_bytes} bytes)")
+    e = network_energy_nj(spec.macs(), result.encoded_bytes, FORMAT_A.name, result.act_bits)
+    print(f"  est. inference energy: {e['total_nj'] / 1e3:.1f} uJ "
+          f"(compute {e['compute_nj'] / 1e3:.1f} + weights {e['memory_nj'] / 1e3:.1f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps.
+
+Uses the full production stack — AdamW with fp32 master weights, remat,
+checkpoint/auto-resume, straggler monitoring — on a single host (pass
+``--mesh`` on a multi-device machine to pjit the same step over a
+data×model mesh; the step function is identical).
+
+Run:  PYTHONPATH=src:. python examples/train_lm.py [--steps 300]
+"""
+import argparse
+
+from repro.configs.base import ArchConfig
+from repro.runtime.train_loop import TrainSetup, train
+
+# ~100M params: 16L x 512d, vocab 32k
+CFG = ArchConfig(
+    name="lm-100m",
+    family="dense",
+    n_layers=16,
+    d_model=512,
+    n_heads=8,
+    n_kv_heads=4,
+    d_ff=2048,
+    vocab=32000,
+    head_dim=64,
+    mlp_kind="swiglu",
+    dtype_str="float32",
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm100m")
+    ap.add_argument("--compress", default=None, choices=[None, "int8", "elp4"])
+    args = ap.parse_args()
+
+    n = CFG.param_count()
+    print(f"model: {CFG.name} ({n / 1e6:.0f}M params)")
+    setup = TrainSetup(
+        cfg=CFG,
+        mesh=None,
+        lr_peak=6e-4,
+        warmup=50,
+        total_steps=args.steps,
+        remat=True,
+        compress=args.compress,
+    )
+    out = train(
+        setup,
+        steps=args.steps,
+        batch_size=args.batch,
+        seq_len=args.seq,
+        ckpt_dir=args.ckpt_dir,
+        ckpt_every=100,
+        log_every=10,
+    )
+    l0 = sum(out["losses"][:10]) / 10
+    l1 = sum(out["losses"][-10:]) / 10
+    print(f"loss: first10={l0:.3f} last10={l1:.3f}")
+    print("straggler report:", out["straggler_report"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Architecture registry + abstract input specs for the dry-run.
+
+Each assigned architecture lives in its own module exporting ``CONFIG``.
+``input_specs(cfg, shape)`` builds ``jax.ShapeDtypeStruct`` stand-ins
+for every model input of that (arch × shape) cell — weak-type-correct,
+shardable, and allocation-free, exactly what ``jit(...).lower()`` needs.
+"""
+from __future__ import annotations
+
+import importlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, ArchConfig, ShapeConfig, applicable_shapes
+
+ARCH_IDS = (
+    "mamba2_780m",
+    "starcoder2_15b",
+    "deepseek_7b",
+    "yi_34b",
+    "qwen3_8b",
+    "olmoe_1b_7b",
+    "kimi_k2_1t_a32b",
+    "recurrentgemma_2b",
+    "seamless_m4t_large_v2",
+    "internvl2_26b",
+)
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    arch_id = arch_id.replace("-", "_")
+    mod = importlib.import_module(f"repro.configs.{arch_id}")
+    return mod.CONFIG
+
+
+def all_configs() -> dict[str, ArchConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig | str) -> dict[str, jax.ShapeDtypeStruct]:
+    """Abstract inputs for one (arch × shape) cell.
+
+    train:   tokens/labels [B, S(-F)] (+ frontend [B, F/S_enc, D])
+    prefill: tokens [B, S(-F)] (+ frontend)
+    decode:  token [B, 1] + pos scalar (cache comes from init_cache's
+             eval_shape; see launch.dryrun)
+    """
+    if isinstance(shape, str):
+        shape = SHAPES[shape]
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    tok = lambda ss: jax.ShapeDtypeStruct((b, ss), i32)
+    emb = lambda ss: jax.ShapeDtypeStruct((b, ss, cfg.d_model), cfg.dtype)
+
+    if shape.kind == "decode":
+        return {"token": jax.ShapeDtypeStruct((b, 1), i32), "pos": jax.ShapeDtypeStruct((), i32)}
+
+    if cfg.family in ("encdec", "audio"):
+        # stub frontend supplies S_enc frame embeddings; decoder sees S tokens
+        out = {"frontend": emb(s), "tokens": tok(s)}
+    elif cfg.frontend_tokens:
+        f = cfg.frontend_tokens
+        out = {"frontend": emb(f), "tokens": tok(s - f)}
+    else:
+        out = {"tokens": tok(s)}
+    if shape.kind == "train":
+        out["labels"] = jax.ShapeDtypeStruct(out["tokens"].shape, i32)
+    return out
+
+
+__all__ = [
+    "ARCH_IDS",
+    "SHAPES",
+    "ArchConfig",
+    "ShapeConfig",
+    "all_configs",
+    "applicable_shapes",
+    "get_config",
+    "input_specs",
+]

@@ -1,0 +1,6 @@
+"""AlexNet — the paper's primary evaluation network (Sec. VI).
+
+Full spec for statistics/energy accounting; the mini variant trains on
+CPU for the reproduction benchmarks (same family, same code paths).
+"""
+from repro.models.cnn import ALEXNET as CONFIG, ALEXNET_MINI as CONFIG_MINI  # noqa: F401

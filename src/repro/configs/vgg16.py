@@ -1,0 +1,2 @@
+"""VGG-16 — the paper's second evaluation network (Sec. VI-C/D)."""
+from repro.models.cnn import VGG16 as CONFIG, VGG_MINI as CONFIG_MINI  # noqa: F401

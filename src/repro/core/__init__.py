@@ -1,0 +1,44 @@
+"""CoNLoCNN core: ELP_BSD format, quantization, error compensation, energy.
+
+Public surface of the paper's contribution. Everything here is
+convert-time (runs once, on host or under jit) — the runtime artifacts
+are plain dequantized weight pytrees plus packed code buffers consumed
+by :mod:`repro.kernels`.
+"""
+from repro.core.elp_bsd import (
+    DigitSpec,
+    ElpBsdFormat,
+    FORMAT_A,
+    FORMAT_B,
+    FORMAT_C,
+    FORMAT_D,
+    PRESET_FORMATS,
+    TABLE2_FORMATS,
+    decode_codes,
+    encode_to_codes,
+    pack_codes,
+    storage_bytes,
+    unpack_codes,
+)
+from repro.core.quantize import (
+    QuantizedTensor,
+    ca_levels,
+    fake_quant_dynamic,
+    fake_quant_uniform,
+    nn_quantize,
+    nn_quantize_idx,
+    quantize_tensor,
+    scale_factor,
+    tql,
+    uniform_levels,
+)
+from repro.core.compensate import (
+    compensate_groups,
+    compensate_tensor,
+    compensated_quantize,
+    mean_error_report,
+)
+from repro.core.energy import network_energy_nj, pdp_fj, pdp_reduction
+from repro.core.methodology import ConversionResult, convert, quantize_model
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,280 @@
+"""Encoded Low-Precision Binary Signed Digit (ELP_BSD) representation.
+
+The paper's number format (Sec. IV): a weight is a *sum of m signed
+power-of-two digits*. Each digit draws its shift count from a small,
+per-digit restricted set, and is encoded as
+
+    [sign bit (if the digit is signed)] [ceil(log2(n_i)) index bits]
+
+so a full weight needs only ``sum_i (signed_i + ceil(log2(n_i)))`` bits.
+
+Notation note (derived to match Table II bit-widths exactly): in the
+paper's ``ELP_BSD{x, [1̄,0,1,2,3,4,5,6,7]}`` notation the leading ``1̄``
+marks the digit as *signed*; the remaining entries are the shift-count
+set. With that reading the four Table II formats cost 4 / 7 / 6 / 6 bits
+per weight, exactly as published, and the single-digit format has 16
+levels ``±2^{0..7}`` with no zero — matching the Sec. VI-D remark that
+'0' is absent but ±1 levels exist.
+
+Shift counts may be negative (``2^-1 = 0.5``); the *scaled* value of a
+code is ``SF * sum_d sign_d * 2^{shift_d}`` (Sec. V step 2 fixes
+``SF = max|W| / 2^{max shift}`` per layer).
+
+Everything here is convert-time (host) code: numpy for table building,
+jnp-compatible pure functions for encode/decode so they can also run
+inside jitted conversion pipelines.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+from typing import Sequence
+
+import numpy as np
+
+__all__ = [
+    "DigitSpec",
+    "ElpBsdFormat",
+    "FORMAT_A",
+    "FORMAT_B",
+    "FORMAT_C",
+    "FORMAT_D",
+    "TABLE2_FORMATS",
+    "PRESET_FORMATS",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class DigitSpec:
+    """One signed power-of-two digit of an ELP_BSD format.
+
+    Attributes:
+      shifts: allowed shift counts (exponents of 2); may be negative.
+      signed: whether the digit carries a sign bit. An unsigned digit
+        always contributes ``+2^shift``.
+    """
+
+    shifts: tuple[int, ...]
+    signed: bool = True
+
+    def __post_init__(self) -> None:
+        if len(self.shifts) == 0:
+            raise ValueError("digit needs at least one shift count")
+        if len(set(self.shifts)) != len(self.shifts):
+            raise ValueError(f"duplicate shift counts: {self.shifts}")
+
+    @property
+    def index_bits(self) -> int:
+        return max(1, math.ceil(math.log2(len(self.shifts)))) if len(self.shifts) > 1 else 0
+
+    @property
+    def bits(self) -> int:
+        return self.index_bits + (1 if self.signed else 0)
+
+    @property
+    def values(self) -> np.ndarray:
+        """All contributions this digit can make (unscaled)."""
+        mags = np.asarray([2.0**s for s in self.shifts], dtype=np.float64)
+        if self.signed:
+            return np.concatenate([mags, -mags])
+        return mags
+
+
+@dataclasses.dataclass(frozen=True)
+class ElpBsdFormat:
+    """A complete ELP_BSD format: an ordered tuple of digits.
+
+    ``name`` is used in configs / benchmark CSVs. The format is the
+    *unscaled* level structure; pairing with a per-layer scale factor
+    happens in :mod:`repro.core.quantize`.
+    """
+
+    digits: tuple[DigitSpec, ...]
+    name: str = "elp_bsd"
+
+    def __post_init__(self) -> None:
+        if len(self.digits) == 0:
+            raise ValueError("format needs at least one digit")
+
+    # -- bit accounting -----------------------------------------------------
+    @property
+    def bits_per_weight(self) -> int:
+        return sum(d.bits for d in self.digits)
+
+    @property
+    def max_shift(self) -> int:
+        return max(max(d.shifts) for d in self.digits)
+
+    # -- level table ---------------------------------------------------------
+    def code_values(self) -> np.ndarray:
+        """Value of every raw bit code ``0 .. 2^bits_per_weight - 1``.
+
+        Defined *by* the bit-level decoder so encode→pack→decode is
+        consistent by construction. Redundant codes (same value via
+        different digit combos, Sec. IV-2) appear as duplicated values;
+        out-of-range index fields alias the last shift of their digit's
+        LUT and therefore duplicate existing values too.
+        """
+        return decode_codes(np.arange(2**self.bits_per_weight, dtype=np.int64), self)
+
+    def valid_code_values(self) -> np.ndarray:
+        """Values over the cartesian product of *listed* digit choices.
+
+        Used for the redundancy metric (Sec. IV-2), which counts value
+        collisions among intended combinations only.
+        """
+        vals = np.zeros(1, dtype=np.float64)
+        for d in self.digits:
+            vals = (vals[:, None] + d.values[None, :]).reshape(-1)
+        return vals
+
+    def levels(self) -> np.ndarray:
+        """Sorted unique quantization levels (unscaled TQL)."""
+        return np.unique(self.code_values())
+
+    def level_codes(self) -> np.ndarray:
+        """For each entry of :meth:`levels`, one raw code producing it.
+
+        When several codes are redundant the lowest code wins, which
+        keeps encode→decode deterministic.
+        """
+        cv = self.code_values()
+        lv = self.levels()
+        # first occurrence of each level in code order
+        order = np.argsort(cv, kind="stable")
+        sorted_vals = cv[order]
+        # index of first code for each unique value
+        first = np.searchsorted(sorted_vals, lv, side="left")
+        return order[first].astype(np.int32)
+
+    @property
+    def n_levels(self) -> int:
+        return int(self.levels().size)
+
+    def redundancy(self) -> float:
+        """Fraction of intended digit combos that are redundant (Sec. IV-2)."""
+        vv = self.valid_code_values()
+        return 1.0 - np.unique(vv).size / vv.size
+
+    # -- per-digit field layout (for packing & the Pallas kernel) ------------
+    def field_layout(self) -> list[tuple[int, int, int]]:
+        """(offset, sign_bits, index_bits) per digit, LSB-first packing."""
+        out = []
+        off = 0
+        for d in self.digits:
+            out.append((off, 1 if d.signed else 0, d.index_bits))
+            off += d.bits
+        return out
+
+    def shift_tables(self) -> list[np.ndarray]:
+        """Per-digit shift-count LUTs, padded to 2**index_bits entries.
+
+        Padding repeats the last entry so out-of-range indices (unused
+        codes) stay harmless.
+        """
+        tabs = []
+        for d in self.digits:
+            n = 2**d.index_bits if d.index_bits else 1
+            t = np.asarray(d.shifts + (d.shifts[-1],) * (n - len(d.shifts)), dtype=np.int32)[:n]
+            tabs.append(t)
+        return tabs
+
+    def describe(self) -> str:
+        parts = []
+        for d in self.digits:
+            parts.append(("s" if d.signed else "u") + str(list(d.shifts)))
+        return f"ELP_BSD{{SF, {', '.join(parts)}}} [{self.bits_per_weight}b]"
+
+
+# ---------------------------------------------------------------------------
+# The four Table II formats. Bit widths: 4 / 7 / 6 / 6 per weight.
+# ---------------------------------------------------------------------------
+FORMAT_A = ElpBsdFormat(
+    (DigitSpec(shifts=tuple(range(0, 8)), signed=True),),
+    name="elp_bsd_a4",
+)
+FORMAT_B = ElpBsdFormat(
+    (
+        DigitSpec(shifts=tuple(range(0, 8)), signed=True),
+        DigitSpec(shifts=(1, 2, 4, 5), signed=True),
+    ),
+    name="elp_bsd_b7",
+)
+FORMAT_C = ElpBsdFormat(
+    (
+        DigitSpec(shifts=tuple(range(0, 8)), signed=True),
+        DigitSpec(shifts=(1, 5), signed=True),
+    ),
+    name="elp_bsd_c6",
+)
+FORMAT_D = ElpBsdFormat(
+    (
+        DigitSpec(shifts=(0, 2, 5, 7), signed=True),
+        DigitSpec(shifts=(1, 2, 4, 5), signed=True),
+    ),
+    name="elp_bsd_d6",
+)
+
+TABLE2_FORMATS: tuple[ElpBsdFormat, ...] = (FORMAT_A, FORMAT_B, FORMAT_C, FORMAT_D)
+PRESET_FORMATS: dict[str, ElpBsdFormat] = {f.name: f for f in TABLE2_FORMATS}
+
+
+def encode_to_codes(levels_idx: np.ndarray, fmt: ElpBsdFormat) -> np.ndarray:
+    """Map level indices (into ``fmt.levels()``) to raw bit codes."""
+    return fmt.level_codes()[levels_idx]
+
+
+def decode_codes(codes: np.ndarray, fmt: ElpBsdFormat) -> np.ndarray:
+    """Decode raw bit codes to unscaled float values (numpy oracle).
+
+    This is the bit-level reference the Pallas kernel is tested against:
+    per digit, extract sign + index fields, look up the shift count and
+    accumulate ``±2^shift``.
+    """
+    codes = np.asarray(codes, dtype=np.int64)
+    out = np.zeros(codes.shape, dtype=np.float64)
+    tabs = fmt.shift_tables()
+    for (off, sbits, ibits), tab, d in zip(fmt.field_layout(), tabs, fmt.digits):
+        field = (codes >> off) & ((1 << (sbits + ibits)) - 1)
+        idx = field & ((1 << ibits) - 1) if ibits else np.zeros_like(field)
+        sign = np.where((field >> ibits) & 1, -1.0, 1.0) if sbits else 1.0
+        out = out + sign * np.exp2(tab[idx].astype(np.float64))
+    return out
+
+
+def pack_codes(codes: np.ndarray, fmt: ElpBsdFormat) -> np.ndarray:
+    """Bit-pack raw codes into a flat uint8 buffer (storage format).
+
+    Weights are packed contiguously at ``fmt.bits_per_weight`` bits each,
+    LSB-first, final byte zero-padded. This is the HBM layout whose byte
+    count the roofline analysis credits to the paper's technique.
+    """
+    bits = fmt.bits_per_weight
+    codes = np.asarray(codes, dtype=np.uint64).reshape(-1)
+    total_bits = bits * codes.size
+    buf = np.zeros((total_bits + 7) // 8, dtype=np.uint8)
+    positions = np.arange(codes.size, dtype=np.uint64) * bits
+    for b in range(bits):
+        bitvals = ((codes >> np.uint64(b)) & np.uint64(1)).astype(np.uint8)
+        pos = positions + b
+        np.bitwise_or.at(buf, (pos // 8).astype(np.int64), bitvals << (pos % 8).astype(np.uint8))
+    return buf
+
+
+def unpack_codes(buf: np.ndarray, n: int, fmt: ElpBsdFormat) -> np.ndarray:
+    """Inverse of :func:`pack_codes`: recover ``n`` raw codes."""
+    bits = fmt.bits_per_weight
+    buf = np.asarray(buf, dtype=np.uint8)
+    positions = np.arange(n, dtype=np.int64) * bits
+    out = np.zeros(n, dtype=np.uint64)
+    for b in range(bits):
+        pos = positions + b
+        bitvals = (buf[pos // 8] >> (pos % 8).astype(np.uint8)) & np.uint8(1)
+        out |= bitvals.astype(np.uint64) << np.uint64(b)
+    return out.astype(np.int64)
+
+
+def storage_bytes(n_weights: int, fmt: ElpBsdFormat) -> int:
+    """HBM bytes for ``n_weights`` packed at this format's bit-width."""
+    return (n_weights * fmt.bits_per_weight + 7) // 8

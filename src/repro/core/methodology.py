@@ -1,0 +1,133 @@
+"""Sec. V — the full CoNLoCNN conversion methodology.
+
+Given a trained model (a pytree of weights + an eval callback), the loop:
+
+  1. finds the critical activation bit-width ``CBW_A`` (lowest uniform
+     activation precision whose accuracy loss stays within ``AC``),
+  2. computes per-layer scale factors for the chosen ELP_BSD format,
+  3. nearest-neighbour-quantizes each layer against its TQL,
+  4. runs Algorithm 1 error compensation per layer,
+  5. re-evaluates; if the accuracy constraint is violated it walks
+     ``CBW_A`` back up toward ``BW_max`` and retries.
+
+The model is treated as a flat map ``name -> (weight, group_axes)`` so
+the same driver converts CNN filters and LM matmuls alike. Conversion is
+one-shot/compile-time: the returned weights are drop-in dequantized
+replacements plus the encoded form for storage accounting.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.compensate import compensate_tensor
+from repro.core.elp_bsd import ElpBsdFormat
+from repro.core.quantize import QuantizedTensor, quantize_tensor
+
+Array = jax.Array
+EvalFn = Callable[[Mapping[str, Array], int | None], float]
+# eval_fn(weights, act_bits) -> accuracy in [0, 1]; act_bits None = fp.
+
+
+@dataclasses.dataclass
+class ConversionResult:
+    weights: dict[str, Array]
+    quantized: dict[str, QuantizedTensor]
+    act_bits: int
+    accuracy: float
+    baseline_accuracy: float
+    encoded_bytes: int
+    raw_bytes: int
+
+    @property
+    def compression(self) -> float:
+        return self.raw_bytes / max(self.encoded_bytes, 1)
+
+    @property
+    def accuracy_loss(self) -> float:
+        return self.baseline_accuracy - self.accuracy
+
+
+def find_critical_act_bits(
+    eval_fn: EvalFn,
+    weights: Mapping[str, Array],
+    baseline_acc: float,
+    ac: float,
+    bw_max: int = 8,
+    bw_min: int = 2,
+) -> int:
+    """Sec. V step 1: lowest activation bit-width within the loss budget."""
+    cbw = bw_max
+    for bits in range(bw_max, bw_min - 1, -1):
+        acc = eval_fn(weights, bits)
+        if baseline_acc - acc > ac:
+            break
+        cbw = bits
+    return cbw
+
+
+def quantize_model(
+    weights: Mapping[str, Array],
+    group_axes: Mapping[str, Sequence[int]],
+    fmt: ElpBsdFormat,
+    *,
+    compensate: bool = True,
+    skip: Sequence[str] = (),
+) -> tuple[dict[str, Array], dict[str, QuantizedTensor]]:
+    """Steps 2-4 for every layer: SF → TQL → NN quant → Algorithm 1."""
+    out_w: dict[str, Array] = {}
+    out_q: dict[str, QuantizedTensor] = {}
+    for name, w in weights.items():
+        if name in skip or w.ndim < 2:
+            out_w[name] = w  # biases / norms stay full precision (paper Fig. 3)
+            continue
+        qt = quantize_tensor(w, fmt)
+        if compensate:
+            qt = compensate_tensor(w, qt, group_axes.get(name, (0,)))
+        out_w[name] = qt.values
+        out_q[name] = qt
+    return out_w, out_q
+
+
+def convert(
+    weights: Mapping[str, Array],
+    group_axes: Mapping[str, Sequence[int]],
+    fmt: ElpBsdFormat,
+    eval_fn: EvalFn,
+    *,
+    ac: float = 0.01,
+    bw_max: int = 8,
+    bw_min: int = 4,
+    compensate: bool = True,
+) -> ConversionResult:
+    """The full Sec. V methodology loop."""
+    baseline_acc = eval_fn(weights, None)
+    cbw = find_critical_act_bits(eval_fn, weights, baseline_acc, ac, bw_max, bw_min)
+
+    qw, qt = quantize_model(weights, group_axes, fmt, compensate=compensate)
+    acc = eval_fn(qw, cbw)
+    # Step 5: walk activation precision back up while constraint violated.
+    while baseline_acc - acc > ac and cbw < bw_max:
+        cbw += 1
+        acc = eval_fn(qw, cbw)
+
+    raw = sum(int(np.prod(w.shape)) * w.dtype.itemsize for w in weights.values())
+    enc = sum(q.nbytes_encoded for q in qt.values())
+    enc += sum(
+        int(np.prod(w.shape)) * w.dtype.itemsize
+        for n, w in weights.items()
+        if n not in qt
+    )
+    return ConversionResult(
+        weights=qw,
+        quantized=qt,
+        act_bits=cbw,
+        accuracy=acc,
+        baseline_accuracy=baseline_acc,
+        encoded_bytes=enc,
+        raw_bytes=raw,
+    )

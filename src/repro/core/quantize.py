@@ -1,0 +1,164 @@
+"""Quantization primitives: scale factors, level tables, NN quantization.
+
+Implements Sec. V steps 2–3 of the paper:
+
+  * per-layer scale factor ``SF = max|W| / 2^{max shift}``,
+  * table of quantization levels ``TQL = SF * fmt.levels()``,
+  * nearest-neighbour quantization against the TQL,
+
+plus uniform fixed-point *activation* quantization (Sec. V step 1 keeps
+activations in traditional FP at a searched critical bit-width) and the
+CAxCNN (reduced-precision CSD, 1 non-zero digit) baseline of Sec. VI-D.
+
+All quantizers are pure jnp functions so they compose with jit/pjit; the
+level tables are small host-side numpy arrays closed over as constants.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.elp_bsd import ElpBsdFormat
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Scale factor & TQL (Sec. V steps 2-3)
+# ---------------------------------------------------------------------------
+def scale_factor(w: Array | np.ndarray, fmt: ElpBsdFormat) -> float:
+    """Per-layer scale factor ``SF = max|W| / 2^{max shift}`` (Sec. V)."""
+    mx = float(jnp.max(jnp.abs(w)))
+    if mx == 0.0:
+        return 1.0
+    return mx / (2.0 ** fmt.max_shift)
+
+
+def tql(fmt: ElpBsdFormat, sf: float) -> np.ndarray:
+    """Table of quantization levels for one layer: ``SF * levels``."""
+    return (fmt.levels() * sf).astype(np.float64)
+
+
+# ---------------------------------------------------------------------------
+# Nearest-neighbour quantization against an arbitrary sorted level table
+# ---------------------------------------------------------------------------
+def nn_quantize_idx(w: Array, levels: np.ndarray) -> Array:
+    """Indices of the nearest level for each element of ``w``.
+
+    ``levels`` must be sorted ascending (unique). Ties go to the lower
+    level (matches ``np.searchsorted`` midpoint convention).
+    """
+    lv = jnp.asarray(levels)
+    mid = (lv[1:] + lv[:-1]) / 2.0
+    return jnp.searchsorted(mid, w.astype(lv.dtype), side="right").astype(jnp.int32)
+
+
+def nn_quantize(w: Array, levels: np.ndarray) -> tuple[Array, Array]:
+    """Nearest-neighbour quantization. Returns (quantized values, indices)."""
+    idx = nn_quantize_idx(w, levels)
+    return jnp.asarray(levels)[idx].astype(w.dtype), idx
+
+
+def second_neighbor_idx(w: Array, levels: np.ndarray, nn_idx: Array) -> Array:
+    """Index of the level on the *other* side of ``w`` from its NN level.
+
+    This is the flip target of Algorithm 1 ("closest level in the
+    opposite direction to the nearest neighbour"). At the table edges
+    (no other side) the NN index itself is returned; callers mask these
+    out of the candidate set.
+    """
+    lv = jnp.asarray(levels)
+    n = lv.shape[0]
+    nn_val = lv[nn_idx]
+    other = jnp.where(w.astype(lv.dtype) >= nn_val, nn_idx + 1, nn_idx - 1)
+    valid = (other >= 0) & (other <= n - 1)
+    return jnp.where(valid, other, nn_idx).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Uniform fixed-point quantization (activations, and the paper's FP baseline)
+# ---------------------------------------------------------------------------
+def uniform_levels(bits: int, max_abs: float) -> np.ndarray:
+    """Symmetric uniform (fixed-point) level table with 2^bits - 1 levels."""
+    qmax = 2 ** (bits - 1) - 1
+    step = max_abs / qmax if qmax else max_abs
+    return np.arange(-qmax, qmax + 1, dtype=np.float64) * step
+
+
+def fake_quant_uniform(x: Array, bits: int, max_abs: float | Array) -> Array:
+    """Simulated symmetric fixed-point quantization (straight rounding).
+
+    Used both for the FP-baseline weight quantization of Fig. 15(a) and
+    for activation quantization at the searched critical bit-width
+    ``CBW_A`` (Sec. V step 1).
+    """
+    qmax = float(2 ** (bits - 1) - 1)
+    scale = jnp.maximum(jnp.asarray(max_abs, dtype=jnp.float32), 1e-12) / qmax
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax)
+    return (q * scale).astype(x.dtype)
+
+
+def fake_quant_dynamic(x: Array, bits: int) -> Array:
+    """Per-tensor dynamic-range activation quantization (runtime scale)."""
+    return fake_quant_uniform(x, bits, jnp.max(jnp.abs(x)))
+
+
+# ---------------------------------------------------------------------------
+# CAxCNN baseline (Sec. VI-D): reduced-precision CSD with 1 non-zero digit
+# ---------------------------------------------------------------------------
+def ca_levels(n_shift_bits: int = 3, include_zero: bool = True) -> np.ndarray:
+    """Canonical-Approximate levels: {0} ∪ {±2^s : s in 0..2^bits-1}.
+
+    With ``n_shift_bits=3`` this is the 17-level / 5-bit CA-1digit
+    representation the paper compares against. The paper's "exhaustive
+    search" conversion reduces to nearest-neighbour on this small table.
+    """
+    shifts = np.arange(0, 2**n_shift_bits)
+    mags = np.exp2(shifts.astype(np.float64))
+    lv = np.concatenate([-mags, mags, [0.0]] if include_zero else [-mags, mags])
+    return np.unique(lv)
+
+
+# ---------------------------------------------------------------------------
+# Layer-level quantization record (carried through the methodology loop)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class QuantizedTensor:
+    """A weight tensor quantized against a per-layer TQL.
+
+    Attributes:
+      values: dequantized (float) values — drop-in replacement weights.
+      level_idx: index into the TQL per element (int32).
+      sf: the layer scale factor.
+      fmt: the ELP_BSD format (None for uniform/CA baselines).
+      levels: the scaled level table (numpy, host).
+    """
+
+    values: Array
+    level_idx: Array
+    sf: float
+    levels: np.ndarray
+    fmt: ElpBsdFormat | None = None
+
+    @property
+    def nbytes_encoded(self) -> int:
+        n = int(np.prod(self.values.shape))
+        if self.fmt is None:
+            # uniform baseline stored at ceil(log2(n_levels)) bits
+            bits = int(np.ceil(np.log2(len(self.levels))))
+            return (n * bits + 7) // 8
+        from repro.core.elp_bsd import storage_bytes
+
+        return storage_bytes(n, self.fmt)
+
+
+def quantize_tensor(w: Array, fmt: ElpBsdFormat) -> QuantizedTensor:
+    """Sec. V steps 2-3 for one tensor: SF → TQL → NN quantization."""
+    sf = scale_factor(w, fmt)
+    levels = tql(fmt, sf)
+    vals, idx = nn_quantize(w, levels)
+    return QuantizedTensor(values=vals, level_idx=idx, sf=sf, levels=levels, fmt=fmt)

@@ -1,0 +1,188 @@
+"""Jitted public ops over packed ELP_BSD weights.
+
+``PackedWeight`` is the runtime artifact of conversion: a code buffer
+(uint8, optionally nibble-packed), the per-layer scale factor, and the
+static format. It is a registered pytree so it flows through jit / pjit
+/ scan like any weight.
+
+``quantized_matmul`` picks between:
+  * ``impl="pallas"`` — the fused decode+matmul kernel (TPU target,
+    interpret-mode on CPU),
+  * ``impl="xla"``    — dequantize-then-dot in plain jnp. Same HBM story
+    (codes are the stored operand), used inside pjit'd serve steps where
+    we want XLA to fuse the decode into the matmul across shards.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.elp_bsd import ElpBsdFormat, PRESET_FORMATS, encode_to_codes
+from repro.core.compensate import compensated_quantize
+from repro.core.quantize import quantize_tensor
+from repro.kernels import ref as kref
+from repro.kernels.elp_bsd_matmul import elp_bsd_matmul
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class PackedWeight:
+    """ELP_BSD-encoded weight matrix ``[..., K, N]``.
+
+    Attributes:
+      codes: uint8 code buffer; ``[..., K, N]`` (u8 mode) or
+        ``[..., K//2, N]`` (nibble mode, 4-bit formats only). Leading
+        dims are stack dims (scan layers / experts); ``lax.scan`` and
+        indexing slice them off naturally because PackedWeight is a
+        registered pytree whose aux data describes only the logical
+        trailing (K, N).
+      sf: per-(stack) scale factors, float32, shape ``[..., 1, 1]``
+        (broadcastable against the decoded codes).
+      fmt_name: key into :data:`repro.core.elp_bsd.PRESET_FORMATS`.
+      nibble: whether codes are nibble-packed along K.
+      shape: logical (K, N) of the trailing weight dims.
+    """
+
+    codes: Array
+    sf: Array
+    fmt_name: str
+    nibble: bool
+    shape: tuple[int, int]
+
+    @property
+    def fmt(self) -> ElpBsdFormat:
+        return PRESET_FORMATS[self.fmt_name]
+
+    @property
+    def nbytes(self) -> int:
+        return int(np.prod(self.codes.shape))
+
+    def tree_flatten_with_keys(self):
+        ga = jax.tree_util.GetAttrKey
+        return ((ga("codes"), self.codes), (ga("sf"), self.sf)), (
+            self.fmt_name,
+            self.nibble,
+            self.shape,
+        )
+
+    def tree_flatten(self):
+        return (self.codes, self.sf), (self.fmt_name, self.nibble, self.shape)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        codes, sf = children
+        return cls(codes, sf, *aux)
+
+
+jax.tree_util.register_pytree_with_keys_class(PackedWeight)
+
+
+def pack_weight(
+    w: Array,
+    fmt: ElpBsdFormat,
+    *,
+    compensate: bool = True,
+    group_axes: Sequence[int] = (0,),
+    nibble: bool | None = None,
+) -> tuple[PackedWeight, Array]:
+    """Convert a float weight matrix into (packed codes, dequantized values).
+
+    Runs Sec. V quantization (+ Algorithm 1 when ``compensate``) and
+    encodes level indices to raw bit codes. Returns the dequantized
+    values too so callers can decide between holding floats (training)
+    or codes (serving).
+    """
+    assert w.ndim == 2, "pack_weight operates on [K, N] matmul weights"
+    if nibble is None:
+        nibble = fmt.bits_per_weight <= 4
+    qt = (
+        compensated_quantize(w, fmt, group_axes)
+        if compensate
+        else quantize_tensor(w, fmt)
+    )
+    codes_np = encode_to_codes(np.asarray(qt.level_idx), fmt).astype(np.uint8)
+    if nibble:
+        k, n = codes_np.shape
+        if k % 2:
+            codes_np = np.concatenate([codes_np, np.zeros((1, n), np.uint8)], 0)
+            k += 1
+        codes_np = (codes_np[0::2] | (codes_np[1::2] << 4)).astype(np.uint8)
+    pw = PackedWeight(
+        codes=jnp.asarray(codes_np),
+        sf=jnp.float32(qt.sf),
+        fmt_name=fmt.name,
+        nibble=bool(nibble),
+        shape=(int(w.shape[0]), int(w.shape[1])),
+    )
+    return pw, qt.values
+
+
+def dequantize(pw: PackedWeight) -> Array:
+    """Decode a PackedWeight back to float32 ``[..., K, N]`` (XLA path)."""
+    codes = kref.unpack_nibbles_k(pw.codes) if pw.nibble else pw.codes
+    w = kref.decode_values(codes, pw.fmt) * pw.sf
+    return w[..., : pw.shape[0], : pw.shape[1]]
+
+
+def _pad_to(x: Array, axis: int, mult: int) -> Array:
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("impl", "block_m", "block_n", "block_k", "out_dtype", "interpret")
+)
+def quantized_matmul(
+    x: Array,
+    pw: PackedWeight,
+    *,
+    impl: str = "pallas",
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    out_dtype=None,
+    interpret: bool | None = None,
+) -> Array:
+    """``x[..., K] @ dequant(pw)[K, N]`` with fused in-VMEM decode."""
+    k, n = pw.shape
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    out_dtype = out_dtype or x.dtype
+    if impl == "xla":
+        out = jnp.dot(
+            x2.astype(jnp.float32), dequantize(pw), preferred_element_type=jnp.float32
+        ).astype(out_dtype)
+        return out.reshape(*lead, n)
+    if impl != "pallas":
+        raise ValueError(f"unknown impl {impl!r}")
+
+    m0 = x2.shape[0]
+    # Pad M and K on activations (zero activations contribute zero even
+    # against garbage codes); pad N on codes and slice the output.
+    x2 = _pad_to(_pad_to(x2, 0, block_m), 1, block_k)
+    codes = pw.codes
+    krow = block_k // 2 if pw.nibble else block_k
+    codes = _pad_to(_pad_to(codes, 0, krow), 1, block_n)
+    out = elp_bsd_matmul(
+        x2,
+        codes,
+        pw.sf,
+        pw.fmt,
+        nibble=pw.nibble,
+        block_m=block_m,
+        block_n=block_n,
+        block_k=block_k,
+        out_dtype=out_dtype,
+        interpret=interpret,
+    )
+    return out[:m0, :n].reshape(*lead, n)

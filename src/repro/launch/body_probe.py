@@ -1,0 +1,296 @@
+"""Per-layer body measurement for scan-correct roofline terms.
+
+XLA's ``cost_analysis`` counts a ``while`` body ONCE, so a scanned
+L-layer model under-reports FLOPs/bytes/collectives by ~L×
+(verified experimentally in EXPERIMENTS.md §Dry-run notes). Rather than
+hand-computing analytic FLOPs, we lower each cell's *layer body* as its
+own jitted function on the same mesh with the same shardings and let
+XLA measure it; the cell totals are then corrected as
+
+    total = raw + Σ_bodies (trips_b - 1) × body_b
+
+where for training the scanned backward body (under ``jax.checkpoint``,
+= recompute-forward + VJP) is measured as ``value_and_grad`` of the
+body, and the raw program already contains one instance of each body.
+
+Bodies per family:
+  dense/moe/vlm:  transformer block           × n_layers
+  audio/encdec:   encoder block × n_layers  +  decoder block × n_dec
+  ssm:            mamba2 block                × n_layers
+  hybrid:         rec block × n_rec  +  attn block × n_attn
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.launch.hlo_stats import collective_stats
+from repro.models import encdec as E, mamba2 as M, rglru as R, transformer as T
+from repro.models.context import ParallelCtx
+from repro.runtime import sharding as shr
+
+
+@dataclasses.dataclass
+class BodyStats:
+    name: str
+    trips: int
+    flops: float
+    bytes: float
+    coll_bytes: float
+
+
+def _slice_layer(tree):
+    """Abstract [L, ...] stacked params -> one layer's slice."""
+    return jax.tree.map(lambda l: jax.ShapeDtypeStruct(l.shape[1:], l.dtype), tree)
+
+
+def _measure(fn: Callable, mesh, in_shardings, args) -> tuple[float, float, float]:
+    jitted = jax.jit(fn, in_shardings=in_shardings)
+    with mesh:
+        compiled = jitted.lower(*args).compile()
+    cost = compiled.cost_analysis()
+    cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+    coll = collective_stats(compiled.as_text())
+    return (
+        float(cost.get("flops", 0.0)),
+        float(cost.get("bytes accessed", 0.0)),
+        coll.per_device_bytes,
+    )
+
+
+def _grad_wrapper(fn: Callable) -> Callable:
+    """value_and_grad of sum(primal) wrt all args — the scanned backward
+    body under jax.checkpoint (recompute + VJP)."""
+
+    def scalar(*args):
+        out = fn(*args)
+        out0 = out[0] if isinstance(out, tuple) else out
+        return jnp.sum(out0.astype(jnp.float32))
+
+    def vag(*args):
+        return jax.value_and_grad(scalar, argnums=tuple(range(len(args))))(*args)
+
+    return vag
+
+
+def _x_spec(mesh, shape=None) -> P:
+    if shape is not None:
+        return shr.input_spec(shape, mesh)
+    return P(shr.batch_axes(mesh), None, None)
+
+
+def _cache_slice_specs(acache_slice, mesh, prefer_seq: bool = False):
+    """Specs for per-layer cache slices [B, S, KV, hd] (batch at dim 0)."""
+
+    def one(l):
+        return shr.cache_spec((), (1,) + l.shape, mesh, prefer_seq=prefer_seq)
+
+    def strip_lead(spec):
+        return P(*tuple(spec)[1:])
+
+    return jax.tree.map(lambda l: strip_lead(one(l)), acache_slice)
+
+
+def probe(
+    cfg: ArchConfig,
+    shape: ShapeConfig,
+    mesh,
+    pctx: ParallelCtx | None,
+    aparams,
+    acache=None,
+) -> list[BodyStats]:
+    """Measure every scanned body of this cell. ``aparams`` is the full
+    abstract param tree (gives body param shapes + shardings)."""
+    kind = shape.kind
+    b, s = shape.global_batch, shape.seq_len
+    prefer_seq = bool(pctx is not None and pctx.flash_decode)
+    out: list[BodyStats] = []
+    ba = shr.batch_axes(mesh)
+    dt = cfg.dtype
+
+    def add(name, trips, fn, in_specs, args, train_grad):
+        f, by, cb = _measure(fn, mesh, in_specs, args)
+        out.append(BodyStats(f"{name}_fwd", trips, f, by, cb))
+        if train_grad:
+            f2, by2, cb2 = _measure(_grad_wrapper(fn), mesh, in_specs, args)
+            out.append(BodyStats(f"{name}_bwd", trips, f2, by2, cb2))
+
+    train = kind == "train"
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        lp = _slice_layer(aparams["blocks"])
+        lspecs = shr.named(mesh, shr.param_specs(lp, mesh))
+        s_eff = s if kind != "decode" else 1
+        x = jax.ShapeDtypeStruct((b, s_eff, cfg.d_model), dt)
+        xs = NamedSharding(mesh, _x_spec(mesh, x.shape))
+        if kind == "decode":
+            ck = _slice_layer({"k": acache["k"], "v": acache["v"]})
+            cs = shr.named(mesh, _cache_slice_specs(ck, mesh, prefer_seq))
+
+            def body(lp_, x_, k_, v_):
+                rope = T.rope_embed(jnp.zeros((1, 1), jnp.int32) + (s - 1), cfg.hd, cfg.rope_theta)
+                y, _ = T.block_apply(
+                    lp_, cfg, x_, rope=(rope[0], rope[1], rope[0], rope[1]),
+                    causal=True, window=cfg.window,
+                    kv_cache=(k_, v_), cache_pos=jnp.int32(s - 1), pctx=pctx,
+                )
+                return y
+
+            add("block", cfg.n_layers, body,
+                (lspecs, xs, cs["k"], cs["v"]), (lp, x, ck["k"], ck["v"]), False)
+        else:
+            def body(lp_, x_):
+                rope = T.rope_embed(jnp.arange(s_eff)[None], cfg.hd, cfg.rope_theta)
+                y, _ = T.block_apply(
+                    lp_, cfg, x_, rope=(rope[0], rope[1], rope[0], rope[1]),
+                    causal=True, window=cfg.window, pctx=pctx,
+                )
+                return y
+
+            add("block", cfg.n_layers, body, (lspecs, xs), (lp, x), train)
+
+    elif cfg.family in ("encdec", "audio"):
+        if isinstance(acache, tuple):  # serve state = (cache, enc_out)
+            acache = acache[0]
+        x = jax.ShapeDtypeStruct((b, s if kind != "decode" else 1, cfg.d_model), dt)
+        xs = NamedSharding(mesh, _x_spec(mesh, x.shape))
+        enc_out = jax.ShapeDtypeStruct((b, s, cfg.d_model), dt)
+
+        lp_e = _slice_layer(aparams["encoder"])
+        especs = shr.named(mesh, shr.param_specs(lp_e, mesh))
+        xe = jax.ShapeDtypeStruct((b, s, cfg.d_model), dt)
+
+        def enc_body(lp_, x_):
+            rope = T.rope_embed(jnp.arange(s)[None], cfg.hd, cfg.rope_theta)
+            y, _ = T.block_apply(
+                lp_, cfg, x_, rope=(rope[0], rope[1], rope[0], rope[1]), causal=False, pctx=pctx
+            )
+            return y
+
+        if kind != "decode":
+            add("enc_block", cfg.n_layers, enc_body, (especs, xs), (lp_e, xe), train)
+
+        lp_d = _slice_layer(aparams["decoder"])
+        dspecs = shr.named(mesh, shr.param_specs(lp_d, mesh))
+        sd = s if kind != "decode" else 1
+
+        if kind == "decode":
+            ck = _slice_layer(acache)
+            cs = shr.named(mesh, _cache_slice_specs(ck, mesh, prefer_seq))
+
+            def dec_body(lp_, x_, k_, v_, eo_):
+                rope = T.rope_embed(jnp.zeros((1, 1), jnp.int32) + (s - 1), cfg.hd, cfg.rope_theta)
+                y, _ = T.block_apply(
+                    lp_, cfg, x_, rope=(rope[0], rope[1], rope[0], rope[1]),
+                    causal=True, kv_cache=(k_, v_), cache_pos=jnp.int32(s - 1),
+                    enc_out=eo_, pctx=pctx,
+                )
+                return y
+
+            add("dec_block", cfg.n_dec_layers, dec_body,
+                (dspecs, xs, cs["k"], cs["v"], xs),
+                (lp_d, x, ck["k"], ck["v"], enc_out), False)
+        else:
+            def dec_body(lp_, x_, eo_):
+                rope = T.rope_embed(jnp.arange(sd)[None], cfg.hd, cfg.rope_theta)
+                y, _ = T.block_apply(
+                    lp_, cfg, x_, rope=(rope[0], rope[1], rope[0], rope[1]),
+                    causal=True, enc_out=eo_, pctx=pctx,
+                )
+                return y
+
+            add("dec_block", cfg.n_dec_layers, dec_body, (dspecs, xs, xs), (lp_d, x, enc_out), train)
+
+    elif cfg.family == "ssm":
+        lp = _slice_layer(aparams["blocks"])
+        lspecs = shr.named(mesh, shr.param_specs(lp, mesh))
+        if kind == "decode":
+            conv, ssd = acache
+            st = (_slice_layer(conv), _slice_layer(ssd))
+            stspecs = (
+                shr.named(mesh, _cache_slice_specs(st[0], mesh)),
+                shr.named(mesh, _cache_slice_specs(st[1], mesh)),
+            )
+            x = jax.ShapeDtypeStruct((b, 1, cfg.d_model), dt)
+
+            def body(lp_, x_, c_, h_):
+                y, _ = M.block_apply(lp_, cfg, x_, state=(c_, h_))
+                return y
+
+            add("ssm_block", cfg.n_layers, body,
+                (lspecs, NamedSharding(mesh, _x_spec(mesh, x.shape))) + stspecs,
+                (lp, x, st[0], st[1]), False)
+        else:
+            x = jax.ShapeDtypeStruct((b, s, cfg.d_model), dt)
+
+            def body(lp_, x_):
+                y, _ = M.block_apply(lp_, cfg, x_)
+                return y
+
+            add("ssm_block", cfg.n_layers, body,
+                (lspecs, NamedSharding(mesh, _x_spec(mesh, x.shape))), (lp, x), train)
+
+    elif cfg.family == "hybrid":
+        g, n_rec, n_attn, tail = R._counts(cfg)
+        x = jax.ShapeDtypeStruct((b, s if kind != "decode" else 1, cfg.d_model), dt)
+        xs = NamedSharding(mesh, _x_spec(mesh, x.shape))
+        lp_r = _slice_layer(aparams["rec"])
+        rspecs = shr.named(mesh, shr.param_specs(lp_r, mesh))
+        lp_a = _slice_layer(aparams["attn"])
+        aspecs = shr.named(mesh, shr.param_specs(lp_a, mesh))
+
+        if kind == "decode":
+            cslices = _slice_layer(acache)
+            cspecs = _cache_slice_specs(cslices, mesh, prefer_seq)
+
+            def rec_body(lp_, x_, cw_, h_):
+                y, _ = R.rec_block(lp_, cfg, x_, state=(cw_, h_))
+                return y
+
+            add("rec_block", n_rec, rec_body,
+                (rspecs, xs, shr.named(mesh, cspecs["conv"]), shr.named(mesh, cspecs["h"])),
+                (lp_r, x, cslices["conv"], cslices["h"]), False)
+
+            def attn_body(lp_, x_, k_, v_):
+                rope = T.rope_embed(jnp.zeros((1, 1), jnp.int32) + (s - 1), cfg.hd, cfg.rope_theta)
+                y, _ = R.attn_block(
+                    lp_, cfg, x_, rope=(rope[0], rope[1], rope[0], rope[1]),
+                    kv_cache=(k_, v_), cache_pos=jnp.int32(s - 1),
+                )
+                return y
+
+            add("attn_block", n_attn, attn_body,
+                (aspecs, xs, shr.named(mesh, cspecs["k"]), shr.named(mesh, cspecs["v"])),
+                (lp_a, x, cslices["k"], cslices["v"]), False)
+        else:
+            def rec_body(lp_, x_):
+                y, _ = R.rec_block(lp_, cfg, x_)
+                return y
+
+            add("rec_block", n_rec, rec_body, (rspecs, xs), (lp_r, x), train)
+
+            def attn_body(lp_, x_):
+                rope = T.rope_embed(jnp.arange(s)[None], cfg.hd, cfg.rope_theta)
+                y, _ = R.attn_block(lp_, cfg, x_, rope=(rope[0], rope[1], rope[0], rope[1]))
+                return y
+
+            add("attn_block", n_attn, attn_body, (aspecs, xs), (lp_a, x), train)
+
+    return out
+
+
+def corrected_totals(
+    raw_flops: float, raw_bytes: float, raw_coll: float, bodies: list[BodyStats]
+) -> dict[str, float]:
+    """raw + (trips-1) × body for every scanned body."""
+    f, by, cb = raw_flops, raw_bytes, raw_coll
+    for b in bodies:
+        f += (b.trips - 1) * b.flops
+        by += (b.trips - 1) * b.bytes
+        cb += (b.trips - 1) * b.coll_bytes
+    return {"flops": f, "bytes": by, "coll_bytes": cb}

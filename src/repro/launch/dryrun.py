@@ -1,0 +1,359 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import: jax locks the
+# device count at first initialization. Everything below is ordinary.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this builds the REAL jitted entry point (full train step
+incl. ZeRO-1 optimizer update, or serve prefill / decode step) from
+abstract ShapeDtypeStructs — no allocation — and must succeed on
+
+  * the single-pod 16×16 ("data","model") mesh (256 chips), and
+  * the 2×16×16 ("pod","data","model") mesh (512 chips).
+
+It prints ``compiled.memory_analysis()`` (fits-in-HBM evidence) and
+``compiled.cost_analysis()`` (FLOPs/bytes for §Roofline), parses the
+optimized HLO for collective traffic, and dumps one JSON per cell that
+benchmarks/roofline.py aggregates into EXPERIMENTS.md.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3_8b --shape train_4k
+  python -m repro.launch.dryrun --all [--multipod-only|--singlepod-only]
+  python -m repro.launch.dryrun --arch kimi_k2_1t_a32b --shape decode_32k --quant elp4
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import SHAPES, applicable_shapes, get_config, input_specs, ARCH_IDS
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.launch.hlo_stats import collective_stats, roofline_terms
+from repro.launch.mesh import make_production_mesh
+from repro.models import get_model
+from repro.optim import adamw
+from repro.runtime import sharding as shr
+from repro.runtime.train_loop import TrainSetup, abstract_state, make_train_step, state_shardings
+from repro.runtime.serve_loop import ServeSetup
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeConfig) -> float:
+    """6·N_active·tokens (train) / 2·N_active·tokens (inference)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def _lower_cell(
+    cfg: ArchConfig,
+    shape: ShapeConfig,
+    mesh,
+    quant: str | None,
+    *,
+    flash: bool = False,
+    seqp: bool = False,
+    kvq: bool = False,
+):
+    api = get_model(cfg)
+    specs = input_specs(cfg, shape)
+    extras: dict = {}
+
+    if shape.kind == "train":
+        setup = TrainSetup(cfg=cfg, mesh=mesh, remat=True, moe_impl="ep", seq_parallel=seqp)
+        aparams, aopt = abstract_state(setup, api)
+        pspecs, ospecs = state_shardings(setup, aparams, aopt)
+        bspecs = shr.input_specs_tree(specs, mesh)
+        step = make_train_step(setup, api)
+        jitted = jax.jit(
+            step,
+            in_shardings=(
+                shr.named(mesh, pspecs),
+                shr.named(mesh, ospecs),
+                None,
+                shr.named(mesh, bspecs),
+            ),
+            donate_argnums=(0, 1),
+        )
+        extras.update(aparams=aparams, acache=None, pctx=setup.pctx())
+        with mesh:
+            return jitted.lower(aparams, aopt, None, specs), extras
+
+    serve = ServeSetup(
+        cfg=cfg,
+        mesh=mesh,
+        max_len=shape.seq_len,
+        batch=shape.global_batch,
+        moe_impl="ep",
+        flash_decode=flash,
+    )
+    pctx = serve.pctx()
+    aparams = jax.eval_shape(lambda: api.init_params(cfg, jax.random.PRNGKey(0)))
+    if quant:
+        from repro.runtime.quantized_params import abstract_quantize_tree
+
+        aparams = abstract_quantize_tree(aparams, cfg, quant)
+    pspecs = shr.param_specs(aparams, mesh)
+    if kvq and cfg.family in ("dense", "moe", "vlm"):
+        acache = jax.eval_shape(
+            lambda: api.init_cache(cfg, shape.global_batch, shape.seq_len, quant=True)
+        )
+    else:
+        acache = jax.eval_shape(
+            lambda: api.init_cache(cfg, shape.global_batch, shape.seq_len)
+        )
+    cspecs = shr.cache_specs_tree(acache, mesh, prefer_seq=flash)
+    if cfg.family in ("encdec", "audio") and shape.kind == "decode":
+        # serve state = (decoder KV cache, encoder output)
+        enc_out = jax.ShapeDtypeStruct(
+            (shape.global_batch, shape.seq_len, cfg.d_model), cfg.dtype
+        )
+        acache = (acache, enc_out)
+        cspecs = (cspecs, shr.input_spec(enc_out.shape, mesh))
+
+    extras.update(aparams=aparams, acache=acache, pctx=pctx)
+    if shape.kind == "prefill":
+        bspecs = shr.input_specs_tree(specs, mesh)
+
+        def prefill_fn(params, batch, cache):
+            return api.prefill(params, cfg, batch, cache, pctx=pctx)
+
+        jitted = jax.jit(
+            prefill_fn,
+            in_shardings=(
+                shr.named(mesh, pspecs),
+                shr.named(mesh, bspecs),
+                shr.named(mesh, cspecs),
+            ),
+            donate_argnums=(2,),
+        )
+        with mesh:
+            return jitted.lower(aparams, specs, acache), extras
+
+    # decode: one token against the full cache
+    def decode_fn(params, token, cache, pos):
+        return api.decode_step(params, cfg, token, cache, pos, pctx=pctx)
+
+    tok_spec = shr.input_spec((shape.global_batch, 1), mesh)
+    jitted = jax.jit(
+        decode_fn,
+        in_shardings=(
+            shr.named(mesh, pspecs),
+            jax.sharding.NamedSharding(mesh, tok_spec),
+            shr.named(mesh, cspecs),
+            None,
+        ),
+        donate_argnums=(2,),
+    )
+    with mesh:
+        return jitted.lower(aparams, specs["token"], acache, specs["pos"]), extras
+
+
+def run_cell(
+    arch_id: str,
+    shape_name: str,
+    multi_pod: bool,
+    out_dir: str | None,
+    quant: str | None = None,
+    verbose: bool = True,
+    tag: str = "",
+    flash: bool = False,
+    seqp: bool = False,
+    kvq: bool = False,
+) -> dict:
+    cfg = get_config(arch_id)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+    rec: dict = {
+        "arch": arch_id,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "devices": n_dev,
+        "quant": quant or "none",
+        "flash": flash,
+        "seqp": seqp,
+        "kvq": kvq,
+        "status": "ok",
+    }
+    t0 = time.time()
+    try:
+        lowered, extras = _lower_cell(cfg, shape, mesh, quant, flash=flash, seqp=seqp, kvq=kvq)
+        rec["lower_s"] = time.time() - t0
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = time.time() - t1
+
+        mem = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "code_bytes": int(getattr(mem, "generated_code_size_in_bytes", 0)),
+        }
+        rec["memory"]["total_per_device_gib"] = (
+            rec["memory"]["argument_bytes"]
+            + rec["memory"]["output_bytes"]
+            + rec["memory"]["temp_bytes"]
+        ) / 2**30
+
+        cost = compiled.cost_analysis()
+        cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+        flops_dev = float(cost.get("flops", 0.0))
+        bytes_dev = float(cost.get("bytes accessed", 0.0))
+        rec["cost"] = {"flops_per_device": flops_dev, "bytes_per_device": bytes_dev}
+
+        hlo_text = compiled.as_text()
+        coll = collective_stats(hlo_text)
+        rec["collectives"] = {
+            "per_device_bytes": coll.per_device_bytes,
+            "count": coll.count,
+            "by_op": coll.by_op,
+        }
+        from repro.launch.hlo_stats import cpu_convert_artifact_bytes
+
+        artifact = cpu_convert_artifact_bytes(hlo_text)
+        rec["memory"]["cpu_convert_artifact_bytes"] = artifact
+        rec["memory"]["temp_bytes_tpu_adjusted"] = (
+            rec["memory"]["temp_bytes"] - artifact
+        )
+
+        # Scan-correct totals: measure each scanned layer body on the same
+        # mesh and add (trips-1) × body (XLA counts while bodies once).
+        import dataclasses as _dc
+
+        from repro.launch import body_probe
+
+        bodies = body_probe.probe(
+            cfg, shape, mesh, extras["pctx"], extras["aparams"], extras["acache"]
+        )
+        rec["bodies"] = [_dc.asdict(b) for b in bodies]
+        tot = body_probe.corrected_totals(
+            flops_dev, bytes_dev, coll.per_device_bytes, bodies
+        )
+        # TPU-adjust: the hoisted f32 stash is written once and read once
+        # on CPU; neither transfer exists on TPU.
+        tot["bytes"] = max(tot["bytes"] - 2.0 * artifact, 0.0)
+        if quant:
+            # Fused-kernel adjustment: the XLA fallback materializes the
+            # dequantized f32 weights (4B write + 4B read per weight);
+            # the Pallas decode-matmul consumes codes directly in VMEM.
+            from repro.kernels.ops import PackedWeight
+
+            n_qw_dev = 0.0
+            msize = mesh.shape["model"]
+
+            def _count(leaf):
+                nonlocal n_qw_dev
+                if isinstance(leaf, PackedWeight):
+                    n = float(np.prod(leaf.codes.shape[:-2])) * leaf.shape[0] * leaf.shape[1]
+                    n_qw_dev += n / msize
+
+            jax.tree.map(
+                _count,
+                extras["aparams"],
+                is_leaf=lambda l: isinstance(l, PackedWeight),
+            )
+            rec["quant_dequant_overhead_bytes"] = 8.0 * n_qw_dev
+            tot["bytes_xla_unfused"] = tot["bytes"]
+            tot["bytes"] = max(tot["bytes"] - 8.0 * n_qw_dev, 0.0)
+        rec["corrected"] = tot
+
+        terms = roofline_terms(tot["flops"], tot["bytes"], tot["coll_bytes"])
+        mf = model_flops(cfg, shape)
+        terms["model_flops"] = mf
+        terms["hlo_flops_global"] = tot["flops"] * n_dev
+        terms["useful_flop_ratio"] = mf / max(tot["flops"] * n_dev, 1.0)
+        rec["roofline"] = terms
+        rec["roofline_raw_uncorrected"] = roofline_terms(
+            flops_dev, bytes_dev, coll.per_device_bytes
+        )
+
+        if verbose:
+            print(f"--- {arch_id} × {shape_name} × {rec['mesh']} quant={rec['quant']} ---")
+            print("memory_analysis:", mem)
+            print(
+                "cost_analysis: flops/dev=%.3e bytes/dev=%.3e" % (flops_dev, bytes_dev)
+            )
+            print(
+                "collectives: %.3e B/dev over %d ops %s"
+                % (coll.per_device_bytes, coll.count, coll.by_op)
+            )
+            print(
+                "roofline: compute=%.4fs memory=%.4fs collective=%.4fs -> %s"
+                % (
+                    terms["compute_s"],
+                    terms["memory_s"],
+                    terms["collective_s"],
+                    terms["bottleneck"],
+                )
+            )
+            print(
+                "useful-FLOP ratio (6ND/HLO): %.3f | lower %.1fs compile %.1fs"
+                % (terms["useful_flop_ratio"], rec["lower_s"], rec["compile_s"])
+            )
+    except Exception as e:  # noqa: BLE001 — a failed cell is a reported bug
+        rec["status"] = "fail"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        if verbose:
+            print(f"--- {arch_id} × {shape_name} × {rec['mesh']} FAILED: {rec['error']}")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        suffix = f"__{quant}" if quant else ""
+        suffix += f"__{tag}" if tag else ""
+        path = os.path.join(
+            out_dir, f"{arch_id}__{shape_name}__{rec['mesh']}{suffix}.json"
+        )
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multipod", action="store_true", help="use the 2x16x16 mesh")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--quant", default=None, choices=[None, "elp4", "elp8"])
+    ap.add_argument("--flash", action="store_true", help="flash-decoding KV layout")
+    ap.add_argument("--seqp", action="store_true", help="sequence-parallel residuals")
+    ap.add_argument("--kvq", action="store_true", help="int8 KV cache")
+    ap.add_argument("--out", default="benchmarks/results/dryrun")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    cells: list[tuple[str, str, bool]] = []
+    if args.all:
+        for aid in ARCH_IDS:
+            for sh in applicable_shapes(get_config(aid)):
+                cells.append((aid, sh, False))
+                cells.append((aid, sh, True))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        meshes = [False, True] if args.both_meshes else [args.multipod]
+        for mp in meshes:
+            cells.append((args.arch, args.shape, mp))
+
+    failures = 0
+    for aid, sh, mp in cells:
+        rec = run_cell(
+            aid, sh, mp, args.out, quant=args.quant, tag=args.tag,
+            flash=args.flash, seqp=args.seqp, kvq=args.kvq,
+        )
+        failures += rec["status"] != "ok"
+    print(f"\n{len(cells) - failures}/{len(cells)} cells OK")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

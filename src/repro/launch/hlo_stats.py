@@ -1,0 +1,166 @@
+"""Roofline-term extraction from compiled SPMD artifacts.
+
+``cost_analysis()`` gives per-device FLOPs / bytes-accessed; collective
+traffic is NOT in cost_analysis, so ``collective_bytes`` parses the
+post-partitioning optimized HLO (``compiled.as_text()``) and sums the
+traffic of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute.
+
+Byte convention (documented for the roofline table): per-device wire
+bytes per op =
+  * all-reduce:          2 × result bytes × (g-1)/g   (ring send+recv)
+  * all-gather:          result × (g-1)/g
+  * reduce-scatter:      operand(=result×g) × (g-1)/g ≈ result × (g-1)
+  * all-to-all:          result × (g-1)/g
+  * collective-permute:  result bytes
+where g = collective group size parsed from replica_groups. Totals are
+then multiplied by device count for the GLOBAL collective_bytes the
+three-term roofline formula expects.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(pred|[sufbc]\w*?\d+)\[([\d,]*)\]")
+_GROUPS_TILED_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_TILED_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2  # conservative default
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    per_device_bytes: float = 0.0
+    by_op: dict = dataclasses.field(default_factory=lambda: defaultdict(float))
+    count: int = 0
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    """Parse optimized (post-SPMD) HLO for collective wire traffic."""
+    st = CollectiveStats()
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)", s)
+        if not m:
+            continue
+        result_type, op = m.group(1), m.group(2)
+        if op.endswith("-start"):
+            op = op[: -len("-start")]
+        if op not in _COLLECTIVES:
+            continue
+        g = _group_size(s)
+        rb = _shape_bytes(result_type)
+        if op == "all-reduce":
+            wire = 2.0 * rb * (g - 1) / g
+        elif op == "all-gather":
+            wire = rb * (g - 1) / g
+        elif op == "reduce-scatter":
+            wire = rb * (g - 1)
+        elif op == "all-to-all":
+            wire = rb * (g - 1) / g
+        else:  # collective-permute
+            wire = float(rb)
+        st.per_device_bytes += wire
+        st.by_op[op] += wire
+        st.count += 1
+    st.by_op = dict(st.by_op)
+    return st
+
+
+def cpu_convert_artifact_bytes(hlo_text: str) -> int:
+    """Bytes of hoisted bf16→f32 whole-buffer converts (CPU-only artifact).
+
+    The CPU backend legalizes bf16 dots by converting operands to f32;
+    XLA then hoists the convert of the (loop-invariant) remat stash out
+    of the backward loop, materializing an f32 copy of the entire
+    [L, B, S, D] buffer. A TPU MXU consumes bf16 natively — no such
+    buffer exists there. We detect big (>256 MiB) f32 convert results
+    feeding from while-loop outputs and report them so memory_analysis
+    can be read TPU-adjusted (see EXPERIMENTS.md §Dry-run notes).
+    """
+    total = 0
+    seen: set[str] = set()
+    in_entry = False
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY "):
+            in_entry = True
+            continue
+        if in_entry and line.startswith("}"):
+            break
+        if not in_entry:
+            continue
+        s = line.strip()
+        m = re.match(
+            r"(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(f32\[[\d,]+\]\S*)\s+"
+            r"(?:convert\(%get-tuple-element[\w.\-]*\)|"
+            r"fusion\(%get-tuple-element[^)]*\),\s*kind=kLoop,\s*calls=%wrapped_convert)",
+            s,
+        )
+        if not m or m.group(1) in seen:
+            continue
+        b = _shape_bytes(m.group(2))
+        if b > 2**28:
+            seen.add(m.group(1))
+            total += b
+    return total
+
+
+# ---------------------------------------------------------------------------
+# TPU v5e hardware constants (per chip)
+# ---------------------------------------------------------------------------
+PEAK_FLOPS = 197e12  # bf16
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s/link
+
+
+def roofline_terms(
+    flops_per_device: float,
+    bytes_per_device: float,
+    coll_bytes_per_device: float,
+) -> dict[str, float]:
+    """The three roofline terms in seconds (per the assignment formulas;
+    global quantities = per-device × chips cancel the chip count)."""
+    compute_s = flops_per_device / PEAK_FLOPS
+    memory_s = bytes_per_device / HBM_BW
+    collective_s = coll_bytes_per_device / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s, "collective_s": collective_s}
+    terms["bottleneck"] = max(terms, key=lambda k: terms[k]).replace("_s", "")
+    terms["total_s"] = max(compute_s, memory_s, collective_s)
+    return terms

@@ -1,0 +1,127 @@
+"""Model zoo registry: family → (init, loss, forward, prefill, decode).
+
+Uniform API so the training loop, serving loop, and dry-run treat all
+ten assigned architectures identically:
+
+  api = get_model(cfg)
+  params = api.init_params(cfg, key)
+  loss   = api.loss_fn(params, cfg, batch, pctx=..., remat=...)
+  cache  = api.init_cache(cfg, batch_size, max_len)
+  logits, cache = api.prefill(params, cfg, batch, cache, pctx=...)
+  logits, cache = api.decode_step(params, cfg, token, cache, pos, pctx=...)
+
+``batch`` is a dict with "tokens"/"labels" and, for vlm/audio archs,
+"frontend" (precomputed patch/frame embeddings — the stub frontend).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.context import ParallelCtx
+from repro.models import encdec, mamba2, rglru, transformer
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    init_params: Callable[..., Any]
+    loss_fn: Callable[..., Array]
+    init_cache: Callable[..., Any]
+    prefill: Callable[..., tuple[Array, Any]]
+    decode_step: Callable[..., tuple[Array, Any]]
+
+
+def _tf_api() -> ModelApi:
+    def loss(params, cfg, batch, *, pctx=None, remat=True):
+        return transformer.loss_fn(
+            params,
+            cfg,
+            batch["tokens"],
+            batch["labels"],
+            frontend=batch.get("frontend"),
+            pctx=pctx,
+            remat=remat,
+        )
+
+    def prefill(params, cfg, batch, cache, *, pctx=None):
+        return transformer.prefill(
+            params, cfg, batch["tokens"], cache, frontend=batch.get("frontend"), pctx=pctx
+        )
+
+    def decode(params, cfg, token, cache, pos, *, pctx=None):
+        return transformer.decode_step(params, cfg, token, cache, pos, pctx=pctx)
+
+    return ModelApi(transformer.init_params, loss, transformer.init_cache, prefill, decode)
+
+
+def _ssm_api() -> ModelApi:
+    def loss(params, cfg, batch, *, pctx=None, remat=True):
+        return mamba2.loss_fn(params, cfg, batch["tokens"], batch["labels"], remat=remat)
+
+    def init_cache(cfg, batch, max_len):
+        return mamba2.init_state(cfg, batch)
+
+    def prefill(params, cfg, batch, cache, *, pctx=None):
+        return mamba2.prefill(params, cfg, batch["tokens"], cache)
+
+    def decode(params, cfg, token, cache, pos, *, pctx=None):
+        return mamba2.decode_step(params, cfg, token, cache, pos)
+
+    return ModelApi(mamba2.init_params, loss, init_cache, prefill, decode)
+
+
+def _hybrid_api() -> ModelApi:
+    def loss(params, cfg, batch, *, pctx=None, remat=True):
+        return rglru.loss_fn(params, cfg, batch["tokens"], batch["labels"], remat=remat)
+
+    def prefill(params, cfg, batch, cache, *, pctx=None):
+        return rglru.prefill(params, cfg, batch["tokens"], cache)
+
+    def decode(params, cfg, token, cache, pos, *, pctx=None):
+        return rglru.decode_step(params, cfg, token, cache, pos)
+
+    return ModelApi(rglru.init_params, loss, rglru.init_cache, prefill, decode)
+
+
+def _encdec_api() -> ModelApi:
+    def loss(params, cfg, batch, *, pctx=None, remat=True):
+        return encdec.loss_fn(
+            params,
+            cfg,
+            batch["tokens"],
+            batch["labels"],
+            frontend=batch["frontend"],
+            pctx=pctx,
+            remat=remat,
+        )
+
+    def prefill(params, cfg, batch, cache, *, pctx=None):
+        return encdec.prefill(
+            params, cfg, batch["tokens"], cache, frontend=batch["frontend"], pctx=pctx
+        )
+
+    def decode(params, cfg, token, cache, pos, *, pctx=None):
+        return encdec.decode_step(params, cfg, token, cache, pos, pctx=pctx)
+
+    return ModelApi(encdec.init_params, loss, encdec.init_cache, prefill, decode)
+
+
+_FAMILIES = {
+    "dense": _tf_api,
+    "moe": _tf_api,
+    "vlm": _tf_api,
+    "ssm": _ssm_api,
+    "hybrid": _hybrid_api,
+    "encdec": _encdec_api,
+    "audio": _encdec_api,
+}
+
+
+def get_model(cfg: ArchConfig) -> ModelApi:
+    return _FAMILIES[cfg.family]()

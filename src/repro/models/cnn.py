@@ -1,0 +1,207 @@
+"""CNNs for the faithful paper reproduction: AlexNet, VGG-16 (+ minis).
+
+The paper evaluates on AlexNet/VGG-16 (ImageNet). ImageNet is not
+available offline, so the repro pipeline trains *mini* variants of the
+same families on a deterministic synthetic image task and validates the
+paper's *relative* claims (error-compensation gains vs bit-width,
+format ranking); the full-size defs exist for parameter-statistics
+experiments (Fig. 3 distributions) and energy accounting (MAC counts).
+
+Weights: conv ``[H, W, Cin, Cout]`` (quantization group = spatial dims
+per (Cin, Cout) channel — exactly the paper's Algorithm 1 grouping),
+fc ``[in, out]`` (group = contracting rows).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import dense_init
+
+Array = jax.Array
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class Conv:
+    ch: int
+    k: int
+    stride: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class Pool:
+    k: int = 2
+    stride: int = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class Fc:
+    out: int
+
+
+@dataclasses.dataclass(frozen=True)
+class CnnSpec:
+    name: str
+    layers: tuple[Any, ...]
+    input_hw: int
+    input_ch: int = 3
+
+    def macs(self) -> int:
+        """Multiply-accumulates per inference (for the energy model)."""
+        hw, ch = self.input_hw, self.input_ch
+        total = 0
+        for l in self.layers:
+            if isinstance(l, Conv):
+                hw = hw // l.stride
+                total += hw * hw * l.k * l.k * ch * l.ch
+                ch = l.ch
+            elif isinstance(l, Pool):
+                hw = hw // l.stride
+            elif isinstance(l, Fc):
+                total += (hw * hw * ch if hw else ch) * l.out
+                hw = 0
+                ch = l.out
+        return total
+
+
+ALEXNET = CnnSpec(
+    "alexnet",
+    (
+        Conv(96, 11, 4),
+        Pool(),
+        Conv(256, 5),
+        Pool(),
+        Conv(384, 3),
+        Conv(384, 3),
+        Conv(256, 3),
+        Pool(),
+        Fc(4096),
+        Fc(4096),
+        Fc(1000),
+    ),
+    input_hw=224,
+)
+
+VGG16 = CnnSpec(
+    "vgg16",
+    (
+        Conv(64, 3), Conv(64, 3), Pool(),
+        Conv(128, 3), Conv(128, 3), Pool(),
+        Conv(256, 3), Conv(256, 3), Conv(256, 3), Pool(),
+        Conv(512, 3), Conv(512, 3), Conv(512, 3), Pool(),
+        Conv(512, 3), Conv(512, 3), Conv(512, 3), Pool(),
+        Fc(4096), Fc(4096), Fc(1000),
+    ),
+    input_hw=224,
+)
+
+# CPU-trainable mini variants (same family shape, same code paths).
+ALEXNET_MINI = CnnSpec(
+    "alexnet_mini",
+    (Conv(16, 5, 2), Pool(), Conv(32, 3), Pool(), Conv(32, 3), Fc(128), Fc(10)),
+    input_hw=32,
+)
+VGG_MINI = CnnSpec(
+    "vgg_mini",
+    (Conv(16, 3), Conv(16, 3), Pool(), Conv(32, 3), Conv(32, 3), Pool(), Fc(128), Fc(10)),
+    input_hw=32,
+)
+
+
+def init_params(spec: CnnSpec, key: Array, dtype=F32) -> dict[str, Array]:
+    params: dict[str, Array] = {}
+    ch = spec.input_ch
+    hw = spec.input_hw
+    idx = 0
+    flat: int | None = None
+    for l in spec.layers:
+        key, sub = jax.random.split(key)
+        if isinstance(l, Conv):
+            params[f"conv{idx}_w"] = dense_init(sub, (l.k, l.k, ch, l.ch), dtype) * np.sqrt(
+                1.0 / (l.k * l.k)
+            )
+            params[f"conv{idx}_b"] = jnp.zeros((l.ch,), dtype)
+            ch = l.ch
+            hw = hw // l.stride
+            idx += 1
+        elif isinstance(l, Pool):
+            hw = hw // l.stride
+        elif isinstance(l, Fc):
+            fan_in = flat if flat is not None else hw * hw * ch
+            params[f"fc{idx}_w"] = dense_init(sub, (fan_in, l.out), dtype)
+            params[f"fc{idx}_b"] = jnp.zeros((l.out,), dtype)
+            flat = l.out
+            idx += 1
+    return params
+
+
+def forward(
+    params: dict[str, Array], spec: CnnSpec, x: Array, act_bits: int | None = None
+) -> Array:
+    """x: [B, H, W, C] images → logits [B, n_classes].
+
+    ``act_bits`` simulates uniform fixed-point activation quantization
+    (Sec. V step 1: the critical-bit-width search, dynamic per-tensor
+    range as in the paper's FP implementation).
+    """
+    from repro.core.quantize import fake_quant_dynamic
+
+    def q(t):
+        return fake_quant_dynamic(t, act_bits) if act_bits else t
+
+    idx = 0
+    flat = False
+    n_layers = sum(isinstance(l, (Conv, Fc)) for l in spec.layers)
+    x = q(x)
+    for l in spec.layers:
+        if isinstance(l, Conv):
+            w = params[f"conv{idx}_w"]
+            x = jax.lax.conv_general_dilated(
+                x.astype(F32),
+                w.astype(F32),
+                window_strides=(l.stride, l.stride),
+                padding="SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            ) + params[f"conv{idx}_b"].astype(F32)
+            x = q(jax.nn.relu(x))
+            idx += 1
+        elif isinstance(l, Pool):
+            x = jax.lax.reduce_window(
+                x, -jnp.inf, jax.lax.max, (1, l.k, l.k, 1), (1, l.stride, l.stride, 1), "VALID"
+            )
+        elif isinstance(l, Fc):
+            if not flat:
+                x = x.reshape(x.shape[0], -1)
+                flat = True
+            x = jnp.dot(x, params[f"fc{idx}_w"].astype(F32)) + params[f"fc{idx}_b"].astype(F32)
+            idx += 1
+            if idx < n_layers:
+                x = q(jax.nn.relu(x))
+    return x
+
+
+def weight_group_axes(params: dict[str, Array]) -> dict[str, tuple[int, ...]]:
+    """Quantization/compensation groups per weight (paper Sec. III-B.4:
+    intra-channel = spatial dims for convs)."""
+    out = {}
+    for name, w in params.items():
+        if name.endswith("_b"):
+            continue
+        out[name] = (0, 1) if name.startswith("conv") else (0,)
+    return out
+
+
+def loss_fn(params, spec: CnnSpec, x: Array, y: Array) -> Array:
+    logits = forward(params, spec, x)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - gold)
+
+
+def accuracy(params, spec: CnnSpec, x: Array, y: Array) -> Array:
+    return jnp.mean((jnp.argmax(forward(params, spec, x), -1) == y).astype(F32))

@@ -1,0 +1,32 @@
+"""Parallel execution context threaded through model code.
+
+``ParallelCtx`` tells layers how the current mesh is laid out so that
+manually-parallel blocks (expert-parallel MoE via ``shard_map``,
+flash-decoding over a sequence-sharded KV cache) can name their axes.
+``None`` means single-device execution (smoke tests) — every layer must
+also work without a context.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelCtx:
+    mesh: jax.sharding.Mesh
+    batch_axes: tuple[str, ...] = ("data",)  # axes carrying the batch dim
+    model_axis: str = "model"  # tensor/expert-parallel axis
+    moe_impl: str = "ep"  # ep | dense
+    # §Perf hillclimb switches (baseline = False = paper-faithful layout):
+    flash_decode: bool = False  # decode attention over a seq-sharded KV cache
+    seq_parallel: bool = False  # Megatron-SP residuals: seq sharded over model
+
+    @property
+    def all_axes(self) -> tuple[str, ...]:
+        return tuple(self.batch_axes) + (self.model_axis,)
+
+    @property
+    def model_size(self) -> int:
+        return self.mesh.shape[self.model_axis]

@@ -1,0 +1,120 @@
+"""Flash-decoding: single-token attention over a sequence-sharded KV cache.
+
+Baseline decode shards the cache over heads (or head_dim when heads do
+not divide the model axis) — the head_dim fallback makes the QK
+contraction *partial* per shard and XLA inserts a full
+``[B, H, 1, S]`` f32 all-reduce per layer (measured ~72 GB wire/token
+on qwen3-8b decode_32k; EXPERIMENTS.md §Perf iteration 1).
+
+Flash-decoding instead shards the cache SEQUENCE over the model axis:
+each shard computes attention over its seq slice and the shards
+exchange only the softmax statistics —
+
+    per shard:  m, l, acc  =  max / sum-exp / weighted V  over s_loc
+    combine:    M = pmax(m);  out = psum(acc·e^{m−M}) / psum(l·e^{m−M})
+
+which is ``[B, H, 1(+hd)]`` — ~S/hd times fewer wire bytes. Implemented
+with ``shard_map`` (manual collectives); used when
+``pctx.flash_decode`` is on and the arch's kv-head count does not
+divide the model axis (divisible archs keep head-sharded decode, which
+is already collective-free).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.models.context import ParallelCtx
+
+Array = jax.Array
+F32 = jnp.float32
+
+
+def _local_attn(q, k, v, ks, vs, pos, *, axis: str, window: int, n_rep: int):
+    """Per-shard body. q[B,1,H,hd]; k/v[B,s_loc,KV,hd] = this shard's
+    slice (optionally int8 with per-token-head scales ks/vs)."""
+    b, _, h, hd = q.shape
+    s_loc = k.shape[1]
+    idx = jax.lax.axis_index(axis)
+    kpos = idx * s_loc + jnp.arange(s_loc)
+
+    kf = k.astype(F32) if ks is None else k.astype(F32) * ks
+    vf = v.astype(F32) if vs is None else v.astype(F32) * vs
+    kf = jnp.repeat(kf, n_rep, axis=2)  # [B,s,H,hd]
+    vf = jnp.repeat(vf, n_rep, axis=2)
+    qf = q.astype(F32) * (1.0 / math.sqrt(hd))
+    logits = jnp.einsum("bhd,bshd->bhs", qf[:, 0], kf)
+    mask = kpos[None, None, :] <= pos
+    if window:
+        mask &= (pos - kpos[None, None, :]) < window
+    logits = jnp.where(mask, logits, -1e30)
+
+    m = jnp.max(logits, axis=-1)  # [B,H]
+    p = jnp.exp(logits - m[..., None])
+    l = jnp.sum(p, axis=-1)  # [B,H]
+    acc = jnp.einsum("bhs,bshd->bhd", p, vf)  # [B,H,hd]
+
+    # combine softmax stats across seq shards — the ONLY collective
+    mg = jax.lax.pmax(m, axis)
+    corr = jnp.exp(m - mg)
+    lg = jax.lax.psum(l * corr, axis)
+    accg = jax.lax.psum(acc * corr[..., None], axis)
+    out = accg / jnp.maximum(lg, 1e-30)[..., None]
+    return out[:, None].astype(q.dtype)  # [B,1,H,hd]
+
+
+def flash_decode_attention(
+    q: Array,
+    ck: Array,
+    cv: Array,
+    pos: Array,
+    *,
+    pctx: ParallelCtx,
+    window: int = 0,
+    ks: Array | None = None,
+    vs: Array | None = None,
+) -> Array:
+    """q[B,1,H,hd] against cache ck/cv[B,S,KV,hd] seq-sharded over model.
+
+    ``ks``/``vs`` are per-(token, head) scales for an int8 cache
+    (dequantized per shard, inside the map — HBM moves int8)."""
+    axis = pctx.model_axis
+    h = q.shape[2]
+    kv = ck.shape[2]
+    n_rep = h // kv
+    ba = pctx.batch_axes
+    b = q.shape[0]
+    import numpy as np
+
+    nb = int(np.prod([pctx.mesh.shape[a] for a in ba]))
+    bspec = ba if (b % nb == 0 and b >= nb) else None
+    qspec = P(bspec, None, None, None)
+    cspec = P(bspec, axis, None, None)
+    pos = jnp.asarray(pos, jnp.int32)
+    if ks is not None:
+        fn = partial(_local_attn, axis=axis, window=window, n_rep=n_rep)
+        mapped = shard_map(
+            fn,
+            mesh=pctx.mesh,
+            in_specs=(qspec, cspec, cspec, cspec, cspec, P()),
+            out_specs=qspec,
+            check_vma=False,
+        )
+        return mapped(q, ck, cv, ks, vs, pos)
+
+    def fn4(q_, k_, v_, pos_):
+        return _local_attn(q_, k_, v_, None, None, pos_, axis=axis, window=window, n_rep=n_rep)
+
+    mapped = shard_map(
+        fn4,
+        mesh=pctx.mesh,
+        in_specs=(qspec, cspec, cspec, P()),
+        out_specs=qspec,
+        check_vma=False,
+    )
+    return mapped(q, ck, cv, pos)

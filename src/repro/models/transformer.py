@@ -1,0 +1,470 @@
+"""Decoder LM and the generic block stack.
+
+One stack implementation serves dense GQA archs, MoE archs (FFN swapped
+for :mod:`repro.models.moe`), the VLM/audio backbones (stub frontend
+embeddings prepended), and the enc-dec model (two stacks, the decoder
+one with cross-attention).
+
+Layer stacking uses ``lax.scan`` over parameters stacked on a leading
+``[L, ...]`` axis: the lowered HLO contains ONE layer body regardless of
+depth, which keeps 61-layer × 512-device dry-run compiles tractable and
+is also what a production TPU deployment wants (XLA pipelining across
+scan iterations). Training wraps the body in ``jax.checkpoint`` (full
+remat — the baseline activation-memory policy; see EXPERIMENTS.md §Perf
+for the policy hillclimb).
+
+KV caches are dicts of ``[L, B, Smax, KV, hd]`` arrays threaded through
+the scan as per-layer xs/ys.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.context import ParallelCtx
+from repro.models import moe as moe_lib
+from repro.models.layers import (
+    apply_rope,
+    attention_chunked,
+    attention_dot,
+    cross_entropy,
+    dense_init,
+    matmul,
+    mlp_apply,
+    repeat_kv,
+    rms_norm,
+    rope_embed,
+)
+
+Array = jax.Array
+F32 = jnp.float32
+
+# KV length at/above which attention switches to the chunked (flash-style)
+# form: O(S·chunk) memory instead of the O(S²) score tensor.
+CHUNKED_ATTN_THRESHOLD = 4096
+ATTN_CHUNK = 1024
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+def init_block_params(
+    cfg: ArchConfig, key: Array, n_layers: int, *, cross: bool = False
+) -> dict[str, Array]:
+    """Stacked parameters for ``n_layers`` transformer blocks."""
+    d, hd, h, kv, ff = cfg.d_model, cfg.hd, cfg.n_heads, cfg.n_kv_heads, cfg.d_ff
+    dt = cfg.dtype
+    ks = jax.random.split(key, 16)
+
+    def stack(k, shape, scale=1.0):
+        keys = jax.random.split(k, n_layers)
+        return jax.vmap(lambda kk: dense_init(kk, shape, dt, scale))(keys)
+
+    p: dict[str, Array] = {
+        "ln1": jnp.zeros((n_layers, d), dt),
+        "ln2": jnp.zeros((n_layers, d), dt),
+        "wq": stack(ks[0], (d, h * hd)),
+        "wk": stack(ks[1], (d, kv * hd)),
+        "wv": stack(ks[2], (d, kv * hd)),
+        "wo": stack(ks[3], (h * hd, d)),
+    }
+    if cfg.qk_norm:
+        p["qnorm"] = jnp.zeros((n_layers, hd), dt)
+        p["knorm"] = jnp.zeros((n_layers, hd), dt)
+    if cross:
+        p["ln_x"] = jnp.zeros((n_layers, d), dt)
+        p["xq"] = stack(ks[4], (d, h * hd))
+        p["xk"] = stack(ks[5], (d, kv * hd))
+        p["xv"] = stack(ks[6], (d, kv * hd))
+        p["xo"] = stack(ks[7], (h * hd, d))
+    if cfg.is_moe:
+        p["router"] = stack(ks[8], (d, cfg.n_experts))
+
+        def estack(k2, shape):
+            keys = jax.random.split(k2, n_layers)
+            return jax.vmap(lambda kk: dense_init(kk, shape, dt))(keys)
+
+        p["we1"] = estack(ks[9], (cfg.n_experts, d, ff))
+        p["we3"] = estack(ks[10], (cfg.n_experts, d, ff))
+        p["we2"] = estack(ks[11], (cfg.n_experts, ff, d))
+    else:
+        p["w1"] = stack(ks[12], (d, ff))
+        p["w2"] = stack(ks[13], (ff, d))
+        if cfg.mlp_kind in ("swiglu", "geglu"):
+            p["w3"] = stack(ks[14], (d, ff))
+    return p
+
+
+def init_params(cfg: ArchConfig, key: Array) -> dict[str, Any]:
+    """Full decoder-LM parameter pytree."""
+    k_emb, k_blocks, k_head, k_fe = jax.random.split(key, 4)
+    p = {
+        "embed": dense_init(k_emb, (cfg.vocab, cfg.d_model), cfg.dtype, scale=1.0),
+        "blocks": init_block_params(cfg, k_blocks, cfg.n_layers),
+        "final_norm": jnp.zeros((cfg.d_model,), cfg.dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(k_head, (cfg.d_model, cfg.vocab), cfg.dtype)
+    if cfg.frontend_tokens:
+        # Stub modality frontend projection (assignment: frontend is a stub;
+        # input_specs() provides precomputed frame/patch embeddings).
+        p["frontend_proj"] = dense_init(k_fe, (cfg.d_model, cfg.d_model), cfg.dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# One block
+# ---------------------------------------------------------------------------
+def _attention(
+    lp: dict[str, Array],
+    cfg: ArchConfig,
+    x: Array,
+    *,
+    rope: tuple[Array, Array] | None,
+    causal: bool,
+    window: int = 0,
+    kv_cache: tuple[Array, Array] | None = None,
+    cache_pos: Array | None = None,
+    prefix: str = "w",
+    kv_override: Array | None = None,
+    pctx: ParallelCtx | None = None,
+) -> tuple[Array, tuple[Array, Array] | None]:
+    """GQA attention, optionally reading/updating a KV cache.
+
+    ``kv_override`` supplies encoder output for cross-attention.
+    Returns (output, updated (k, v) cache or None).
+    """
+    b, s, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    kv_src = x if kv_override is None else kv_override
+    q = matmul(x, lp[prefix + "q"]).reshape(b, s, h, hd)
+    k = matmul(kv_src, lp[prefix + "k"]).reshape(b, kv_src.shape[1], kv, hd)
+    v = matmul(kv_src, lp[prefix + "v"]).reshape(b, kv_src.shape[1], kv, hd)
+    if cfg.qk_norm and prefix == "w":
+        q = rms_norm(q, lp["qnorm"])
+        k = rms_norm(k, lp["knorm"])
+    if rope is not None and kv_override is None:
+        cos_q, sin_q, cos_k, sin_k = rope
+        q = apply_rope(q, cos_q, sin_q)
+        k = apply_rope(k, cos_k, sin_k)
+
+    new_cache = None
+    k_scales = v_scales = None
+    if kv_cache is not None and len(kv_cache) == 4:
+        # int8-quantized cache (per-token-head scales)
+        ck, cv, cks, cvs = kv_cache
+        kq, ksf = _cache_q(k)
+        vq, vsf = _cache_q(v)
+        ck = jax.lax.dynamic_update_slice(ck, kq, (0, cache_pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, vq, (0, cache_pos, 0, 0))
+        cks = jax.lax.dynamic_update_slice(cks, ksf, (0, cache_pos, 0, 0))
+        cvs = jax.lax.dynamic_update_slice(cvs, vsf, (0, cache_pos, 0, 0))
+        new_cache = (ck, cv, cks, cvs)
+        if s == 1 and pctx is not None and pctx.flash_decode:
+            from repro.models.flash_decode import flash_decode_attention
+
+            out = flash_decode_attention(
+                q, ck, cv, cache_pos, pctx=pctx, window=window, ks=cks, vs=cvs
+            )
+            return matmul(out.reshape(b, s, h * hd), lp[prefix + "o"]), new_cache
+        k = _cache_dq(ck, cks, x.dtype)
+        v = _cache_dq(cv, cvs, x.dtype)
+    elif kv_cache is not None:
+        ck, cv = kv_cache
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, cache_pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, cache_pos, 0, 0))
+        k, v = ck, cv
+        new_cache = (ck, cv)
+
+    q_offset = cache_pos if kv_cache is not None else 0
+    if kv_cache is not None and s == 1 and pctx is not None and pctx.flash_decode:
+        # §Perf: flash-decoding over the seq-sharded cache (stats-only
+        # collective instead of a [B,H,1,S] partial-sum all-reduce).
+        from repro.models.flash_decode import flash_decode_attention
+
+        out = flash_decode_attention(q, k, v, cache_pos, pctx=pctx, window=window)
+        return matmul(out.reshape(b, s, h * hd), lp[prefix + "o"]), new_cache
+    kf = repeat_kv(k, h // kv)
+    vf = repeat_kv(v, h // kv)
+    if kv_cache is not None and s == 1:
+        # decode: one query against the cache
+        out = attention_dot(q, kf, vf, causal=causal, window=window, q_offset=q_offset)
+    elif kf.shape[1] >= CHUNKED_ATTN_THRESHOLD:
+        out = attention_chunked(q, kf, vf, causal=causal, window=window, chunk=ATTN_CHUNK)
+    else:
+        out = attention_dot(q, kf, vf, causal=causal, window=window, q_offset=q_offset)
+    return matmul(out.reshape(b, s, h * hd), lp[prefix + "o"]), new_cache
+
+
+def block_apply(
+    lp: dict[str, Array],
+    cfg: ArchConfig,
+    x: Array,
+    *,
+    rope: tuple[Array, ...] | None,
+    causal: bool,
+    window: int = 0,
+    kv_cache: tuple[Array, Array] | None = None,
+    cache_pos: Array | None = None,
+    enc_out: Array | None = None,
+    pctx: ParallelCtx | None = None,
+) -> tuple[Array, tuple[Array, Array] | None]:
+    """Pre-norm transformer block: attn + (cross-attn) + FFN/MoE."""
+    if pctx is not None and pctx.seq_parallel and x.shape[1] > 1:
+        # §Perf: Megatron-style sequence parallelism — the residual
+        # stream (and hence the remat stash the backward scan saves) is
+        # sharded over the model axis on seq; XLA turns the per-block
+        # all-reduces into reduce-scatter + all-gather pairs.
+        from jax.sharding import PartitionSpec as _P
+
+        x = jax.lax.with_sharding_constraint(
+            x, _P(pctx.batch_axes, pctx.model_axis, None)
+        )
+    attn_in = rms_norm(x, lp["ln1"])
+    attn_out, new_cache = _attention(
+        lp,
+        cfg,
+        attn_in,
+        rope=rope,
+        causal=causal,
+        window=window,
+        kv_cache=kv_cache,
+        cache_pos=cache_pos,
+        pctx=pctx,
+    )
+    x = x + attn_out
+    if pctx is not None and pctx.seq_parallel and x.shape[1] > 1:
+        # mid-block boundary: keep the residual seq-sharded so the MLP's
+        # collectives also become reduce-scatter/all-gather pairs.
+        from jax.sharding import PartitionSpec as _P
+
+        x = jax.lax.with_sharding_constraint(
+            x, _P(pctx.batch_axes, pctx.model_axis, None)
+        )
+    if enc_out is not None:
+        xa_in = rms_norm(x, lp["ln_x"])
+        xa_out, _ = _attention(
+            lp, cfg, xa_in, rope=None, causal=False, prefix="x", kv_override=enc_out
+        )
+        x = x + xa_out
+    ffn_in = rms_norm(x, lp["ln2"])
+    if cfg.is_moe:
+        b, s, d = ffn_in.shape
+        y = moe_lib.moe_apply(
+            {k: lp[k] for k in ("router", "we1", "we3", "we2")},
+            ffn_in.reshape(b * s, d),
+            cfg,
+            pctx,
+        ).reshape(b, s, d)
+    else:
+        y = mlp_apply(lp, ffn_in, cfg.mlp_kind)
+    return x + y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Stack (scan over layers)
+# ---------------------------------------------------------------------------
+def stack_apply(
+    blocks: dict[str, Array],
+    cfg: ArchConfig,
+    x: Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    positions: Array | None = None,
+    cache: dict[str, Array] | None = None,
+    cache_pos: Array | None = None,
+    enc_out: Array | None = None,
+    pctx: ParallelCtx | None = None,
+    remat: bool = False,
+) -> tuple[Array, dict[str, Array] | None]:
+    """Run the block stack via ``lax.scan`` over the stacked layer axis."""
+    b, s, d = x.shape
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    cos, sin = rope_embed(positions, cfg.hd, cfg.rope_theta)
+    # New K entries share the query positions (they are written at the
+    # same offsets), so one table serves both.
+    rope = (cos, sin, cos, sin)
+
+    quant_cache = cache is not None and "ks" in cache
+
+    def body(carry, xs):
+        xc = carry
+        if cache is not None:
+            if quant_cache:
+                lp, ck, cv, cks, cvs = xs
+                kvc = (ck, cv, cks, cvs)
+            else:
+                lp, ck, cv = xs
+                kvc = (ck, cv)
+            out, new_kv = block_apply(
+                lp,
+                cfg,
+                xc,
+                rope=rope,
+                causal=causal,
+                window=window,
+                kv_cache=kvc,
+                cache_pos=cache_pos,
+                enc_out=enc_out,
+                pctx=pctx,
+            )
+            return out, new_kv
+        lp = xs
+        out, _ = block_apply(
+            lp, cfg, xc, rope=rope, causal=causal, window=window, enc_out=enc_out, pctx=pctx
+        )
+        return out, None
+
+    fn = jax.checkpoint(body) if remat else body
+    if cache is not None:
+        if quant_cache:
+            xs = (blocks, cache["k"], cache["v"], cache["ks"], cache["vs"])
+            x, kv_out = jax.lax.scan(fn, x, xs)
+            return x, {"k": kv_out[0], "v": kv_out[1], "ks": kv_out[2], "vs": kv_out[3]}
+        xs = (blocks, cache["k"], cache["v"])
+        x, kv_out = jax.lax.scan(fn, x, xs)
+        return x, {"k": kv_out[0], "v": kv_out[1]}
+    x, _ = jax.lax.scan(fn, x, blocks)
+    return x, None
+
+
+# ---------------------------------------------------------------------------
+# Decoder LM public API
+# ---------------------------------------------------------------------------
+def embed_tokens(params, cfg: ArchConfig, tokens: Array, frontend: Array | None) -> Array:
+    x = params["embed"][tokens].astype(cfg.dtype)
+    if frontend is not None:
+        fe = matmul(frontend.astype(cfg.dtype), params["frontend_proj"])
+        x = jnp.concatenate([fe, x], axis=1)
+    return x
+
+
+def unembed(params, cfg: ArchConfig, x: Array) -> Array:
+    x = rms_norm(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return jnp.dot(x, head.astype(x.dtype), preferred_element_type=F32)
+
+
+def forward(
+    params,
+    cfg: ArchConfig,
+    tokens: Array,
+    *,
+    frontend: Array | None = None,
+    pctx: ParallelCtx | None = None,
+    remat: bool = False,
+) -> Array:
+    """Training forward: logits ``[B, S(+F), V]`` (float32)."""
+    x = embed_tokens(params, cfg, tokens, frontend)
+    x, _ = stack_apply(
+        params["blocks"], cfg, x, causal=True, window=cfg.window, pctx=pctx, remat=remat
+    )
+    return unembed(params, cfg, x)
+
+
+def loss_fn(
+    params,
+    cfg: ArchConfig,
+    tokens: Array,
+    labels: Array,
+    *,
+    frontend: Array | None = None,
+    pctx: ParallelCtx | None = None,
+    remat: bool = True,
+) -> Array:
+    """Mean next-token cross entropy (labels already shifted by the data
+    pipeline). Frontend positions (if any) are excluded from the loss."""
+    logits = forward(params, cfg, tokens, frontend=frontend, pctx=pctx, remat=remat)
+    if frontend is not None:
+        logits = logits[:, frontend.shape[1] :]
+    return cross_entropy(logits, labels)
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+def init_cache(
+    cfg: ArchConfig, batch: int, max_len: int, dtype=None, quant: bool = False
+) -> dict[str, Array]:
+    """KV cache. ``quant=True`` stores int8 entries with per-(token,
+    head) float scales — 2x less HBM per read, the §Perf iteration-3
+    lever for cache-bound decode (beyond-paper; the paper quantizes
+    weights, this applies the same storage idea to the cache)."""
+    dtype = dtype or cfg.dtype
+    shape = (cfg.n_dec_layers or cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.hd)
+    if quant:
+        sshape = shape[:-1] + (1,)
+        return {
+            "k": jnp.zeros(shape, jnp.int8),
+            "v": jnp.zeros(shape, jnp.int8),
+            "ks": jnp.zeros(sshape, jnp.float32),
+            "vs": jnp.zeros(sshape, jnp.float32),
+        }
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def _cache_q(x: Array) -> tuple[Array, Array]:
+    """Symmetric int8 quantization over head_dim: x[B,S,KV,hd]."""
+    sf = jnp.max(jnp.abs(x.astype(F32)), axis=-1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x.astype(F32) / sf), -127, 127).astype(jnp.int8)
+    return q, sf
+
+
+def _cache_dq(q: Array, sf: Array, dtype) -> Array:
+    return (q.astype(F32) * sf).astype(dtype)
+
+
+def prefill(
+    params,
+    cfg: ArchConfig,
+    tokens: Array,
+    cache: dict[str, Array],
+    *,
+    frontend: Array | None = None,
+    pctx: ParallelCtx | None = None,
+) -> tuple[Array, dict[str, Array]]:
+    """Fill the cache with the prompt; return last-position logits."""
+    x = embed_tokens(params, cfg, tokens, frontend)
+    x, cache = stack_apply(
+        params["blocks"],
+        cfg,
+        x,
+        causal=True,
+        window=cfg.window,
+        cache=cache,
+        cache_pos=jnp.int32(0),
+        pctx=pctx,
+    )
+    return unembed(params, cfg, x[:, -1:]), cache
+
+
+def decode_step(
+    params,
+    cfg: ArchConfig,
+    token: Array,
+    cache: dict[str, Array],
+    pos: Array,
+    *,
+    pctx: ParallelCtx | None = None,
+) -> tuple[Array, dict[str, Array]]:
+    """One decode step: token ``[B, 1]`` at position ``pos`` → logits."""
+    x = params["embed"][token].astype(cfg.dtype)
+    x, cache = stack_apply(
+        params["blocks"],
+        cfg,
+        x,
+        causal=True,
+        window=cfg.window,
+        positions=pos[None, None] if jnp.ndim(pos) == 0 else pos,
+        cache=cache,
+        cache_pos=pos,
+        pctx=pctx,
+    )
+    return unembed(params, cfg, x), cache

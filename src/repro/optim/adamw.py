@@ -1,0 +1,91 @@
+"""AdamW with fp32 master weights, global-norm clipping, ZeRO-1-ready state.
+
+Pure-pytree implementation (no optax in this container). Model params
+stay in the model dtype (bf16 at scale); the optimizer holds fp32
+master weights + first/second moments — 12 bytes/param, which is why
+the state carries its own (ZeRO-1) sharding in the train step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def init_state(params: Any) -> dict[str, Any]:
+    return {
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params),
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params),
+        # copy=True: master must never alias the model params (donation)
+        "master": jax.tree.map(lambda p: jnp.array(p, dtype=F32, copy=True), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: Any) -> Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(F32))) for g in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> tuple[Any, Array]:
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(F32) * scale), grads), gnorm
+
+
+def update(
+    grads: Any,
+    state: dict[str, Any],
+    cfg: AdamWConfig,
+    lr: Array,
+    param_dtype,
+) -> tuple[Any, dict[str, Any]]:
+    """One AdamW step. Returns (new model params, new state)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state["step"] + 1
+    b1c = 1.0 - cfg.b1 ** step.astype(F32)
+    b2c = 1.0 - cfg.b2 ** step.astype(F32)
+
+    def upd(g, m, v, w):
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mhat = m / b1c
+        vhat = v / b2c
+        w = w - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * w)
+        return m, v, w
+
+    out = jax.tree.map(upd, grads, state["m"], state["v"], state["master"])
+    m = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    v = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    master = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_params = jax.tree.map(lambda w: w.astype(param_dtype), master)
+    return new_params, {"m": m, "v": v, "master": master, "step": step}
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+def warmup_cosine(peak: float, warmup: int, total: int, floor: float = 0.1) -> Callable:
+    def sched(step: Array) -> Array:
+        s = step.astype(F32)
+        warm = peak * s / max(warmup, 1)
+        t = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(s < warmup, warm, cos)
+
+    return sched

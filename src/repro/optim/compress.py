@@ -1,0 +1,116 @@
+"""Gradient compression with error feedback — the paper's idea, re-used.
+
+CoNLoCNN compensates quantization error *once at convert time* by
+balancing the mean error within a group. Distributed training has the
+same structure per step: quantizing gradients before the cross-pod
+all-reduce injects an error whose running sum we can carry and feed
+back (error-feedback / EF-SGD), so the *mean* injected error tends to
+zero over steps — the temporal analogue of Algorithm 1 (recorded as a
+beyond-paper extension in DESIGN.md §2).
+
+Two codecs:
+  * int8 per-block symmetric (standard baseline),
+  * ELP_BSD FORMAT_A 4-bit per-block (the paper's format, 8x smaller
+    than bf16 collectives).
+
+``compressed_mean`` is the manual-DP building block: used inside
+``shard_map`` over the pod axis, it quantizes the local shard, psums
+the *codes'* dequantized values, and returns the mean — on real
+hardware the wire format is the packed codes, so cross-pod collective
+bytes shrink by the compression ratio (what §Perf measures).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.elp_bsd import FORMAT_A
+
+Array = jax.Array
+F32 = jnp.float32
+
+_A4_LEVELS = jnp.asarray(FORMAT_A.levels(), F32)  # ±2^{0..7}, 16 levels
+
+
+def _quant_int8(x: Array, block: int = 256) -> tuple[Array, Array]:
+    flat = x.reshape(-1)
+    pad = (-flat.size) % block
+    flat = jnp.pad(flat, (0, pad)).reshape(-1, block)
+    scale = jnp.max(jnp.abs(flat), axis=1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(flat / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequant_int8(q: Array, scale: Array, shape, size) -> Array:
+    return (q.astype(F32) * scale).reshape(-1)[:size].reshape(shape)
+
+
+def _quant_elp4(x: Array, block: int = 256) -> tuple[Array, Array]:
+    flat = x.reshape(-1)
+    pad = (-flat.size) % block
+    flat = jnp.pad(flat, (0, pad)).reshape(-1, block)
+    sf = jnp.max(jnp.abs(flat), axis=1, keepdims=True) / 128.0 + 1e-12
+    scaled = flat / sf
+    mid = (_A4_LEVELS[1:] + _A4_LEVELS[:-1]) / 2.0
+    idx = jnp.searchsorted(mid, scaled, side="right").astype(jnp.int8)
+    return idx, sf
+
+
+def _dequant_elp4(idx: Array, sf: Array, shape, size) -> Array:
+    return (_A4_LEVELS[idx.astype(jnp.int32)] * sf).reshape(-1)[:size].reshape(shape)
+
+
+def quantize_with_feedback(
+    g: Array, err: Array, codec: str = "int8"
+) -> tuple[Array, Array]:
+    """EF quantization of one gradient leaf. Returns (ĝ, new error)."""
+    x = g.astype(F32) + err
+    if codec == "int8":
+        q, s = _quant_int8(x)
+        xq = _dequant_int8(q, s, x.shape, x.size)
+    elif codec == "elp4":
+        q, s = _quant_elp4(x)
+        xq = _dequant_elp4(q, s, x.shape, x.size)
+    else:
+        raise ValueError(codec)
+    return xq, x - xq
+
+
+def tree_quantize_with_feedback(
+    grads: Any, err_state: Any, codec: str = "int8"
+) -> tuple[Any, Any]:
+    out = jax.tree.map(partial(quantize_with_feedback, codec=codec), grads, err_state)
+    gq = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    err = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    return gq, err
+
+
+def init_error_state(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params)
+
+
+def compressed_mean(x: Array, axis_name: str, codec: str = "int8") -> Array:
+    """Quantize-then-psum mean over ``axis_name`` (use inside shard_map).
+
+    Wire bytes = the code array (1B int8 / 0.5B elp4 per element vs 4B
+    f32); the psum here operates on dequantized values because XLA has
+    no integer-sum-of-codes collective — bytes accounting in the
+    roofline parser credits the code dtype (documented there).
+    """
+    if codec == "int8":
+        q, s = _quant_int8(x)
+        xq = _dequant_int8(q, s, x.shape, x.size)
+    elif codec == "elp4":
+        q, s = _quant_elp4(x)
+        xq = _dequant_elp4(q, s, x.shape, x.size)
+    else:
+        raise ValueError(codec)
+    return jax.lax.pmean(xq, axis_name)
+
+
+def compression_ratio(codec: str) -> float:
+    return {"int8": 4.0, "elp4": 8.0}[codec]

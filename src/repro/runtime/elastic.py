@@ -1,0 +1,51 @@
+"""Elastic scaling: re-mesh and reshard on membership change.
+
+Checkpoints store logical paths + dtypes (see checkpoint.manager), so
+surviving a node failure or a resize is: pick a mesh for the devices
+that are alive, rebuild the sharding rules for THAT mesh (the rules are
+divisibility-aware, so they adapt), and ``device_put`` the restored
+tree. Nothing in the model or step code changes.
+
+``choose_mesh`` encodes the policy: keep the model axis as close to the
+target TP degree as the device count allows (TP must divide the device
+count), give the rest to data (and pod when >256 devices remain
+pod-aligned).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+POD_SIZE = 256
+
+
+def choose_mesh_shape(n_devices: int, target_model: int = 16) -> tuple[tuple[int, ...], tuple[str, ...]]:
+    """Largest mesh for ``n_devices`` honoring the TP target."""
+    model = target_model
+    while model > 1 and n_devices % model != 0:
+        model //= 2
+    rest = n_devices // model
+    if rest > POD_SIZE // model and rest % 2 == 0:
+        # split a pod axis off the data dimension for >1-pod deployments
+        pods = rest * model // POD_SIZE
+        data = rest // pods
+        if pods * data * model == n_devices and data >= 1 and pods > 1:
+            return (pods, data, model), ("pod", "data", "model")
+    return (rest, model), ("data", "model")
+
+
+def make_mesh(devices=None, target_model: int = 16) -> Mesh:
+    devices = devices if devices is not None else jax.devices()
+    shape, axes = choose_mesh_shape(len(devices), target_model)
+    arr = np.asarray(devices).reshape(shape)
+    return Mesh(arr, axes)
+
+
+def reshard(tree, new_mesh: Mesh, spec_tree):
+    """Re-layout a (restored) pytree onto a new mesh."""
+    from jax.sharding import NamedSharding
+
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(new_mesh, s)), tree, spec_tree
+    )

@@ -1,0 +1,114 @@
+"""Convert model parameter pytrees to packed ELP_BSD for serving.
+
+The conversion is the paper's Sec. V methodology applied per stacked
+layer slice — per-slice scale factor ``SF = max|W|/2^max_shift``,
+nearest-neighbour quantization against the format's level table, and
+Algorithm 1 compensation over the contracting-dim rows — implemented
+entirely in jnp so it both (a) jits for real conversions and (b)
+``eval_shape``s for the allocation-free dry-run (a 1T-param Kimi-K2
+conversion is "performed" abstractly in milliseconds).
+
+What gets encoded: every matmul weight that flows through
+``layers.matmul`` or the MoE expert einsums. Embeddings, the LM head,
+depthwise convs, RG-LRU gate matrices, routers, norms and biases stay
+in the model dtype (they are a negligible byte fraction and/or
+accuracy-critical; DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.compensate import compensate_groups
+from repro.core.elp_bsd import ElpBsdFormat, PRESET_FORMATS
+from repro.kernels.ops import PackedWeight
+
+Array = jax.Array
+F32 = jnp.float32
+
+# Leaf names whose trailing [K, N] dims are matmul weights to encode.
+QUANTIZABLE = {
+    "wq", "wk", "wv", "wo", "w1", "w2", "w3", "xq", "xk", "xv", "xo",
+    "in_proj", "out_proj", "w_gate", "w_rec", "w_out", "frontend_proj",
+    "we1", "we2", "we3",
+}
+
+FMT_BY_TAG = {"elp4": "elp_bsd_a4", "elp8": "elp_bsd_c6"}
+
+
+def quantize_stacked(
+    w: Array, fmt: ElpBsdFormat, *, compensate: bool = True, nibble: bool | None = None
+) -> PackedWeight:
+    """Encode ``w[..., K, N]`` with per-stack-slice scale factors."""
+    if nibble is None:
+        nibble = fmt.bits_per_weight <= 4
+    lead = w.shape[:-2]
+    k, n = w.shape[-2:]
+    wf = w.astype(F32)
+    sf = jnp.max(jnp.abs(wf), axis=(-2, -1), keepdims=True) / (2.0 ** fmt.max_shift)
+    sf = jnp.maximum(sf, 1e-20)
+    wn = wf / sf
+
+    levels = jnp.asarray(fmt.levels(), F32)
+    mid = (levels[1:] + levels[:-1]) / 2.0
+    idx = jnp.searchsorted(mid, wn, side="right").astype(jnp.int32)
+    if compensate:
+        # Algorithm 1 over contracting-dim rows: group = K for each
+        # (stack..., N) — transpose K to the back per group.
+        g = wn.reshape(-1, k, n).transpose(0, 2, 1).reshape(-1, k)
+        gi = idx.reshape(-1, k, n).transpose(0, 2, 1).reshape(-1, k)
+        gi = compensate_groups(g, gi, np.asarray(fmt.levels()))
+        idx = (
+            gi.reshape(-1, n, k).transpose(0, 2, 1).reshape(*lead, k, n)
+            if lead
+            else gi.reshape(n, k).T
+        ).astype(jnp.int32)
+
+    level_codes = jnp.asarray(fmt.level_codes(), jnp.int32)
+    codes = level_codes[idx].astype(jnp.uint8)
+    if nibble:
+        assert k % 2 == 0, "nibble packing needs even K"
+        codes = (codes[..., 0::2, :] | (codes[..., 1::2, :] << 4)).astype(jnp.uint8)
+    return PackedWeight(
+        codes=codes, sf=sf.astype(F32), fmt_name=fmt.name, nibble=bool(nibble), shape=(k, n)
+    )
+
+
+def quantize_params_for_serving(
+    params: Any, cfg: ArchConfig, fmt: ElpBsdFormat | str, *, compensate: bool = True
+) -> Any:
+    """Replace every quantizable matmul leaf with a PackedWeight."""
+    if isinstance(fmt, str):
+        fmt = PRESET_FORMATS[FMT_BY_TAG.get(fmt, fmt)]
+
+    def visit(path, leaf):
+        name = None
+        for e in reversed(path):
+            if hasattr(e, "key"):
+                name = str(e.key)
+                break
+        if name in QUANTIZABLE and leaf.ndim >= 2 and leaf.shape[-2] % 2 == 0:
+            return quantize_stacked(leaf, fmt, compensate=compensate)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(visit, params)
+
+
+def abstract_quantize_tree(aparams: Any, cfg: ArchConfig, fmt_tag: str) -> Any:
+    """ShapeDtypeStruct tree of the quantized params (no allocation)."""
+    fmt = PRESET_FORMATS[FMT_BY_TAG.get(fmt_tag, fmt_tag)]
+    return jax.eval_shape(
+        lambda p: quantize_params_for_serving(p, cfg, fmt, compensate=False), aparams
+    )
+
+
+def packed_bytes(params: Any) -> int:
+    """Total weight bytes of a (possibly partially) packed tree."""
+    total = 0
+    for leaf in jax.tree.leaves(params):
+        total += leaf.size * leaf.dtype.itemsize
+    return total

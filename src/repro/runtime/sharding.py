@@ -1,0 +1,204 @@
+"""Divisibility-aware sharding rules.
+
+One mechanism makes all ten architectures compile on the same
+production mesh: a logical dimension is mapped to a mesh axis only if
+its size divides the axis size; otherwise the rule falls through to the
+next candidate dimension (or replication). This is what absorbs the
+awkward configs — yi-34b's 56 heads, seamless' 256206 vocab, olmoe's
+odd expert widths — without per-arch special cases.
+
+Baseline layout (the paper-faithful starting point; §Perf iterates):
+  * column-parallel (out-feature) sharding for up-projections / QKV,
+  * row-parallel (in-feature) sharding for down-projections,
+  * expert sharding for MoE,
+  * vocab-parallel embedding / LM head when the vocab divides,
+  * batch over ("pod", "data"), KV cache heads→model (falling back to
+    head_dim→model, then seq→model),
+  * ZeRO-1: optimizer state additionally sharded over the data axes.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Array = jax.Array
+
+# Weight-name → candidate sharded dim, counted from the END of the shape
+# (robust to the [L, ...] scan-stacking axis).
+_COL = {"wq", "wk", "wv", "w1", "w3", "xq", "xk", "xv", "in_proj", "w_gate",
+        "w_rec", "wa", "wx", "frontend_proj", "router"}
+_ROW = {"wo", "w2", "out_proj", "w_out", "xo"}
+_EXPERT = {"we1", "we2", "we3"}
+_VOCAB = {"embed", "lm_head"}
+_REPL = {"ln", "ln1", "ln2", "ln_x", "final_norm", "enc_norm", "gnorm", "conv_b",
+         "A_log", "D", "dt_bias", "ba", "bx", "lam", "qnorm", "knorm"}
+
+
+def _leaf_name(path) -> str:
+    names = []
+    for entry in path:
+        if hasattr(entry, "key"):
+            names.append(str(entry.key))
+        elif hasattr(entry, "name"):
+            names.append(str(entry.name))
+    if not names:
+        return ""
+    # PackedWeight leaves: "codes" follows the weight's own name and
+    # inherits its rule (the code array mirrors the weight layout);
+    # "sf" is tiny and replicated.
+    if names[-1] == "codes" and len(names) >= 2:
+        return names[-2]
+    if names[-1] == "sf":
+        return "sf"
+    return names[-1]
+
+
+def _try(shape: tuple[int, ...], dim: int, axis: str, size: int) -> P | None:
+    """Spec sharding ``dim`` (negative ok) over ``axis`` if it divides."""
+    d = dim % len(shape)
+    if shape[d] % size == 0 and shape[d] > 0:
+        spec = [None] * len(shape)
+        spec[d] = axis
+        return P(*spec)
+    return None
+
+
+def param_spec(path, shape: tuple[int, ...], mesh: Mesh, model_axis: str = "model") -> P:
+    """Baseline tensor-parallel spec for one parameter."""
+    name = _leaf_name(path)
+    msize = mesh.shape[model_axis]
+    if name in _REPL or name == "sf" or len(shape) == 0 or min(shape) == 0:
+        return P()
+    if name in _VOCAB:
+        # embed [V, D] / lm_head [D, V]: prefer the vocab dim
+        vdim = 0 if name == "embed" else len(shape) - 1
+        for d in (vdim, 1 - vdim if len(shape) == 2 else vdim):
+            s = _try(shape, d, model_axis, msize)
+            if s is not None:
+                return s
+        return P()
+    if name in _EXPERT and len(shape) >= 3:
+        # [L, E, a, b] (or [E, a, b] unstacked): expert dim
+        s = _try(shape, len(shape) - 3, model_axis, msize)
+        if s is not None:
+            return s
+    if name in _COL:
+        for d in (-1, -2):
+            s = _try(shape, d, model_axis, msize)
+            if s is not None:
+                return s
+        return P()
+    if name in _ROW:
+        for d in (-2, -1):
+            s = _try(shape, d, model_axis, msize)
+            if s is not None:
+                return s
+        return P()
+    if name == "conv_w" and len(shape) >= 2:
+        s = _try(shape, -1, model_axis, msize)
+        if s is not None:
+            return s
+    return P()
+
+
+def param_specs(abstract_params: Any, mesh: Mesh, model_axis: str = "model") -> Any:
+    """Specs for a whole parameter pytree (from ``jax.eval_shape``)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_spec(path, leaf.shape, mesh, model_axis), abstract_params
+    )
+
+
+def batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    """Axes carrying the global batch: ("pod","data") when pod exists."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def input_spec(shape: tuple[int, ...], mesh: Mesh) -> P:
+    """Batch-shard inputs over the data axes when the batch divides."""
+    ba = batch_axes(mesh)
+    n = int(np.prod([mesh.shape[a] for a in ba]))
+    if len(shape) >= 1 and shape[0] % n == 0 and shape[0] > 0:
+        return P(ba, *([None] * (len(shape) - 1)))
+    # try data only (pod replicated)
+    if "data" in mesh.shape and shape[0] % mesh.shape["data"] == 0:
+        return P(("data",), *([None] * (len(shape) - 1)))
+    return P(*([None] * len(shape)))
+
+
+def input_specs_tree(abstract_inputs: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(lambda l: input_spec(l.shape, mesh), abstract_inputs)
+
+
+def cache_spec(
+    path,
+    shape: tuple[int, ...],
+    mesh: Mesh,
+    model_axis: str = "model",
+    prefer_seq: bool = False,
+) -> P:
+    """KV / recurrent-state cache layout.
+
+    [L, B, S, KV, hd]-style tensors: batch→data axes, then heads→model
+    if they divide, else head_dim→model, else seq→model. With
+    ``prefer_seq`` (flash-decoding layout, §Perf) the SEQ dim takes the
+    model axis directly. Recurrent states [L, B, ...]: batch→data,
+    widest trailing dim→model.
+    """
+    ba = batch_axes(mesh)
+    nb = int(np.prod([mesh.shape[a] for a in ba]))
+    msize = mesh.shape[model_axis]
+    spec: list[Any] = [None] * len(shape)
+    if len(shape) >= 2:
+        # batch dim is dim 1 for stacked caches, dim 0 for unstacked
+        bdim = 1 if len(shape) >= 3 else 0
+        if shape[bdim] % nb == 0:
+            spec[bdim] = ba
+        elif "data" in mesh.shape and shape[bdim] % mesh.shape["data"] == 0:
+            spec[bdim] = ("data",)
+    if prefer_seq and len(shape) >= 4:
+        sdim = len(shape) - 3  # seq dim of [.., B, S, KV, hd]
+        if shape[sdim] % msize == 0:
+            spec[sdim] = model_axis
+            return P(*spec)
+    # model axis: prefer later dims (heads/features), walk backwards
+    for d in range(len(shape) - 1, 1, -1):
+        if spec[d] is None and shape[d] % msize == 0 and shape[d] >= msize:
+            spec[d] = model_axis
+            break
+    return P(*spec)
+
+
+def cache_specs_tree(
+    abstract_cache: Any, mesh: Mesh, model_axis: str = "model", prefer_seq: bool = False
+) -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda path, l: cache_spec(path, l.shape, mesh, model_axis, prefer_seq),
+        abstract_cache,
+    )
+
+
+def zero1_spec(spec: P, shape: tuple[int, ...], mesh: Mesh) -> P:
+    """Extend a param spec with data-axis sharding for optimizer state
+    (ZeRO-1): the largest yet-unsharded dim divisible by the data axes."""
+    ba = batch_axes(mesh)
+    n = int(np.prod([mesh.shape[a] for a in ba]))
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    cands = [d for d in range(len(shape)) if entries[d] is None and shape[d] % n == 0 and shape[d] >= n]
+    if not cands:
+        return P(*entries)
+    d = max(cands, key=lambda i: shape[i])
+    entries[d] = ba
+    return P(*entries)
+
+
+def zero1_specs_tree(param_spec_tree: Any, abstract_params: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda s, l: zero1_spec(s, l.shape, mesh), param_spec_tree, abstract_params
+    )
+
+
+def named(mesh: Mesh, spec_tree: Any) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree)

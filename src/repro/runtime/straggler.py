@@ -1,0 +1,49 @@
+"""Straggler detection & mitigation hooks.
+
+At 1000-node scale the SPMD step runs at the pace of the slowest host;
+persistent stragglers must be detected and acted on. The monitor keeps
+a rolling step-time median; a step slower than ``threshold × median``
+is a straggle event. Mitigation is a pluggable callback — in a real
+deployment it triggers (in escalating order) data-load rebalancing,
+hot-spare swap-in, or an elastic re-mesh (see runtime/elastic.py);
+here the default action records the event so tests can assert the
+policy fires.
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+from typing import Callable
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    threshold: float = 2.0
+    window: int = 50
+    on_straggle: Callable[[int, float, float], None] | None = None
+    _times: list[float] = dataclasses.field(default_factory=list)
+    _events: list[tuple[int, float, float]] = dataclasses.field(default_factory=list)
+
+    def record(self, dt: float) -> bool:
+        """Record one step duration; returns True if it straggled."""
+        self._times.append(dt)
+        hist = self._times[-self.window : -1]
+        if len(hist) < 5:
+            return False
+        med = statistics.median(hist)
+        if dt > self.threshold * med:
+            ev = (len(self._times) - 1, dt, med)
+            self._events.append(ev)
+            if self.on_straggle:
+                self.on_straggle(*ev)
+            return True
+        return False
+
+    def report(self) -> dict:
+        med = statistics.median(self._times) if self._times else 0.0
+        return {
+            "steps": len(self._times),
+            "median_s": med,
+            "straggle_events": len(self._events),
+            "worst_ratio": max((d / m for _, d, m in self._events), default=1.0),
+        }

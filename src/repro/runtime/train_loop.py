@@ -1,0 +1,229 @@
+"""Distributed training: pjit'd train step + fault-tolerant host loop.
+
+``make_train_step`` builds the jitted step with explicit shardings:
+params TP-sharded (baseline rules), optimizer state ZeRO-1 sharded over
+the data axes, inputs batch-sharded, buffers donated. The same builder
+serves the real trainer, the examples, and the dry-run (which only
+lowers/compiles it).
+
+The host loop adds the large-scale plumbing: checkpoint/restore with
+auto-resume, straggler monitoring, and optional gradient compression
+with error feedback.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.pipeline import LmDataset, shard_batch
+from repro.models import ModelApi, get_model
+from repro.models.context import ParallelCtx
+from repro.optim import adamw
+from repro.optim.compress import init_error_state, tree_quantize_with_feedback
+from repro.runtime import sharding as shr
+from repro.runtime.straggler import StragglerMonitor
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainSetup:
+    """Everything needed to build/lower one train step."""
+
+    cfg: ArchConfig
+    mesh: Mesh | None
+    adamw_cfg: adamw.AdamWConfig = adamw.AdamWConfig()
+    lr_peak: float = 3e-4
+    warmup: int = 100
+    total_steps: int = 1000
+    remat: bool = True
+    compress: str | None = None  # None | int8 | elp4
+    moe_impl: str = "ep"
+    seq_parallel: bool = False
+
+    def pctx(self) -> ParallelCtx | None:
+        if self.mesh is None:
+            return None
+        return ParallelCtx(
+            mesh=self.mesh,
+            batch_axes=shr.batch_axes(self.mesh),
+            model_axis="model",
+            moe_impl=self.moe_impl,
+            seq_parallel=self.seq_parallel,
+        )
+
+
+def abstract_state(setup: TrainSetup, api: ModelApi):
+    """eval_shape of (params, opt_state) — no allocation."""
+    key = jax.random.PRNGKey(0)
+    aparams = jax.eval_shape(lambda: api.init_params(setup.cfg, key))
+    aopt = jax.eval_shape(adamw.init_state, aparams)
+    return aparams, aopt
+
+
+def state_shardings(setup: TrainSetup, aparams, aopt):
+    mesh = setup.mesh
+    pspecs = shr.param_specs(aparams, mesh)
+    zspecs = shr.zero1_specs_tree(pspecs, aparams, mesh)
+    ospecs = {
+        "m": zspecs,
+        "v": zspecs,
+        "master": zspecs,
+        "step": P(),
+    }
+    return pspecs, ospecs
+
+
+def make_train_step(setup: TrainSetup, api: ModelApi | None = None) -> Callable:
+    api = api or get_model(setup.cfg)
+    sched = adamw.warmup_cosine(setup.lr_peak, setup.warmup, setup.total_steps)
+    pctx = setup.pctx()
+    cfg = setup.cfg
+
+    def step_fn(params, opt_state, err_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: api.loss_fn(p, cfg, batch, pctx=pctx, remat=setup.remat)
+        )(params)
+        if setup.compress:
+            grads, err_state = tree_quantize_with_feedback(grads, err_state, setup.compress)
+        lr = sched(opt_state["step"])
+        params, opt_state = adamw.update(
+            grads, opt_state, setup.adamw_cfg, lr, cfg.dtype
+        )
+        metrics = {"loss": loss, "lr": lr, "gnorm": adamw.global_norm(grads)}
+        return params, opt_state, err_state, metrics
+
+    return step_fn
+
+
+def jit_train_step(setup: TrainSetup, api: ModelApi, abstract_batch):
+    """pjit the step with explicit in/out shardings + donation."""
+    mesh = setup.mesh
+    aparams, aopt = abstract_state(setup, api)
+    pspecs, ospecs = state_shardings(setup, aparams, aopt)
+    espec = ospecs["m"] if setup.compress else None
+    bspecs = shr.input_specs_tree(abstract_batch, mesh)
+    step_fn = make_train_step(setup, api)
+
+    in_sh = (
+        shr.named(mesh, pspecs),
+        shr.named(mesh, ospecs),
+        shr.named(mesh, espec) if setup.compress else None,
+        shr.named(mesh, bspecs),
+    )
+    out_sh = (
+        shr.named(mesh, pspecs),
+        shr.named(mesh, ospecs),
+        shr.named(mesh, espec) if setup.compress else None,
+        NamedSharding(mesh, P()),
+    )
+    metrics_spec = {"loss": P(), "lr": P(), "gnorm": P()}
+    out_sh = (
+        shr.named(mesh, pspecs),
+        shr.named(mesh, ospecs),
+        shr.named(mesh, espec) if setup.compress else None,
+        shr.named(mesh, metrics_spec),
+    )
+    return jax.jit(
+        step_fn,
+        in_shardings=in_sh,
+        out_shardings=out_sh,
+        donate_argnums=(0, 1, 2),
+    )
+
+
+def train(
+    setup: TrainSetup,
+    *,
+    steps: int,
+    batch_size: int,
+    seq_len: int,
+    ckpt_dir: str | None = None,
+    ckpt_every: int = 50,
+    log_every: int = 10,
+    seed: int = 0,
+    log_fn: Callable[[str], None] = print,
+) -> dict[str, Any]:
+    """Host training loop: data → step → checkpoint, with auto-resume."""
+    cfg = setup.cfg
+    api = get_model(cfg)
+    mesh = setup.mesh
+    key = jax.random.PRNGKey(seed)
+    ds = LmDataset(cfg, seq_len=seq_len, batch=batch_size, seed=seed)
+
+    if mesh is not None:
+        aparams, _ = abstract_state(setup, api)
+        pspecs, ospecs = state_shardings(setup, aparams, None)
+        with mesh:
+            params = jax.jit(
+                lambda: api.init_params(cfg, key), out_shardings=shr.named(mesh, pspecs)
+            )()
+            opt_state = jax.jit(
+                adamw.init_state, out_shardings=shr.named(mesh, ospecs)
+            )(params)
+    else:
+        params = api.init_params(cfg, key)
+        opt_state = adamw.init_state(params)
+    err_state = init_error_state(params) if setup.compress else None
+
+    start = 0
+    mgr = CheckpointManager(ckpt_dir) if ckpt_dir else None
+    if mgr is not None:
+        restored = mgr.restore_latest({"params": params, "opt": opt_state})
+        if restored is not None:
+            start, tree = restored
+            params, opt_state = tree["params"], tree["opt"]
+            log_fn(f"[resume] restored step {start}")
+
+    if mesh is not None:
+        abatch = jax.eval_shape(lambda: ds.np_batch(0))
+        abatch = jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), abatch
+        )
+        step = jit_train_step(setup, api, abatch)
+        bspecs = shr.input_specs_tree(abatch, mesh)
+    else:
+        step = jax.jit(make_train_step(setup, api), donate_argnums=(0, 1, 2))
+        bspecs = None
+
+    monitor = StragglerMonitor()
+    losses = []
+    ctx = mesh if mesh is not None else _nullcontext()
+    with ctx:
+        for i in range(start, steps):
+            batch = shard_batch(ds.np_batch(i), mesh, bspecs)
+            t0 = time.perf_counter()
+            params, opt_state, err_state, metrics = step(
+                params, opt_state, err_state, batch
+            )
+            loss = float(metrics["loss"])
+            monitor.record(time.perf_counter() - t0)
+            losses.append(loss)
+            if i % log_every == 0:
+                log_fn(f"step {i:5d} loss {loss:.4f} lr {float(metrics['lr']):.2e}")
+            if mgr is not None and (i + 1) % ckpt_every == 0:
+                mgr.save(i + 1, {"params": params, "opt": opt_state})
+    if mgr is not None:
+        mgr.save(steps, {"params": params, "opt": opt_state})
+        mgr.wait()
+    return {
+        "params": params,
+        "opt_state": opt_state,
+        "losses": losses,
+        "straggler_report": monitor.report(),
+    }
+
+
+class _nullcontext:
+    def __enter__(self):
+        return None
+
+    def __exit__(self, *a):
+        return False

@@ -1,0 +1,118 @@
+"""Property-based tests (hypothesis) for the core invariants.
+
+Invariants under test:
+  * nearest-neighbour quantization is idempotent and error-bounded,
+  * Algorithm 1 never increases |group mean error| and only moves
+    values to an adjacent level on the other side of the raw value,
+  * encode→pack→unpack→decode is the identity on level indices,
+  * bit accounting matches the format definition,
+  * gradient compression with error feedback has bounded drift.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    FORMAT_A,
+    FORMAT_B,
+    FORMAT_C,
+    FORMAT_D,
+    TABLE2_FORMATS,
+    compensate_tensor,
+    decode_codes,
+    encode_to_codes,
+    nn_quantize,
+    pack_codes,
+    quantize_tensor,
+    unpack_codes,
+)
+from repro.optim.compress import quantize_with_feedback
+
+FMTS = st.sampled_from(TABLE2_FORMATS)
+
+
+@st.composite
+def weight_arrays(draw, max_elems=256):
+    n = draw(st.integers(4, max_elems))
+    seed = draw(st.integers(0, 2**31 - 1))
+    scale = draw(st.floats(1e-3, 10.0))
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(n) * scale).astype(np.float32)
+
+
+@given(w=weight_arrays(), fmt=FMTS)
+@settings(max_examples=40, deadline=None)
+def test_nn_quantize_idempotent_and_bounded(w, fmt):
+    qt = quantize_tensor(jnp.asarray(w), fmt)
+    # idempotent: re-quantizing quantized values is the identity
+    vals2, _ = nn_quantize(qt.values, qt.levels)
+    np.testing.assert_array_equal(np.asarray(vals2), np.asarray(qt.values))
+    # error bounded by half the largest level gap (within table range)
+    gaps = np.diff(qt.levels)
+    inside = (w >= qt.levels[0]) & (w <= qt.levels[-1])
+    err = np.abs(np.asarray(qt.values) - w)
+    assert np.all(err[inside] <= gaps.max() / 2 + 1e-6)
+
+
+@given(w=weight_arrays(), fmt=FMTS, seed=st.integers(0, 1000))
+@settings(max_examples=40, deadline=None)
+def test_compensation_never_increases_mean_error(w, fmt, seed):
+    rng = np.random.default_rng(seed)
+    g = rng.integers(1, 4)
+    n = (len(w) // g) * g
+    if n < g:
+        return
+    w2 = jnp.asarray(w[:n].reshape(g, n // g))
+    qt = quantize_tensor(w2, fmt)
+    qt2 = compensate_tensor(w2, qt, group_axes=(1,))
+    before = np.abs(np.mean(np.asarray(qt.values) - np.asarray(w2), axis=1))
+    after = np.abs(np.mean(np.asarray(qt2.values) - np.asarray(w2), axis=1))
+    assert np.all(after <= before + 1e-6)
+    # flips move at most one level, to the other side of the raw value
+    didx = np.asarray(qt2.level_idx) - np.asarray(qt.level_idx)
+    assert np.max(np.abs(didx)) <= 1
+
+
+@given(fmt=FMTS, seed=st.integers(0, 2**31 - 1), n=st.integers(1, 300))
+@settings(max_examples=30, deadline=None)
+def test_encode_pack_roundtrip(fmt, seed, n):
+    rng = np.random.default_rng(seed)
+    idx = rng.integers(0, fmt.n_levels, n)
+    codes = encode_to_codes(idx, fmt)
+    buf = pack_codes(codes, fmt)
+    assert buf.nbytes == (n * fmt.bits_per_weight + 7) // 8
+    codes2 = unpack_codes(buf, n, fmt)
+    np.testing.assert_array_equal(codes, codes2)
+    vals = decode_codes(codes2, fmt)
+    np.testing.assert_allclose(vals, fmt.levels()[idx], rtol=0, atol=0)
+
+
+def test_format_bit_accounting_matches_paper():
+    assert FORMAT_A.bits_per_weight == 4
+    assert FORMAT_B.bits_per_weight == 7
+    assert FORMAT_C.bits_per_weight == 6
+    assert FORMAT_D.bits_per_weight == 6
+    # format A: 16 levels, no zero, +-1 present (Sec. VI-D discussion)
+    la = FORMAT_A.levels()
+    assert la.size == 16 and 0.0 not in la and 1.0 in la and -1.0 in la
+
+
+@given(seed=st.integers(0, 2**31 - 1), codec=st.sampled_from(["int8", "elp4"]))
+@settings(max_examples=20, deadline=None)
+def test_error_feedback_bounded_drift(seed, codec):
+    """Σ(ĝ_t) tracks Σ(g_t): the residual never exceeds one quant step."""
+    rng = np.random.default_rng(seed)
+    g_sum = np.zeros(64, np.float32)
+    q_sum = np.zeros(64, np.float32)
+    err = jnp.zeros(64)
+    for t in range(10):
+        g = jnp.asarray(rng.standard_normal(64).astype(np.float32))
+        gq, err = quantize_with_feedback(g, err, codec)
+        g_sum += np.asarray(g)
+        q_sum += np.asarray(gq)
+    # residual == err state, bounded by the largest step for the codec
+    np.testing.assert_allclose(g_sum - q_sum, np.asarray(err), rtol=1e-4, atol=1e-4)
+    bound = {"int8": 0.05, "elp4": 2.0}[codec]  # elp4 has coarse large levels
+    assert np.max(np.abs(np.asarray(err))) < bound * 10

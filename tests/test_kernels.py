@@ -1,0 +1,145 @@
+"""Per-kernel correctness: Pallas ELP_BSD matmul vs. the pure-jnp oracle.
+
+Sweeps shapes, dtypes, formats, and packing modes in interpret mode
+(this container has no TPU; the kernel targets TPU BlockSpecs).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.elp_bsd import FORMAT_A, FORMAT_B, FORMAT_C, FORMAT_D
+from repro.kernels import ref as kref
+from repro.kernels.elp_bsd_matmul import elp_bsd_matmul
+from repro.kernels.ops import PackedWeight, dequantize, pack_weight, quantized_matmul
+
+
+def _random_codes(rng, fmt, k, n):
+    return rng.integers(0, 2 ** fmt.bits_per_weight, size=(k, n)).astype(np.uint8)
+
+
+@pytest.mark.parametrize("fmt", [FORMAT_A, FORMAT_B, FORMAT_C, FORMAT_D], ids=lambda f: f.name)
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (256, 384, 128), (128, 256, 384)])
+def test_kernel_matches_ref_u8(fmt, m, k, n):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    codes = jnp.asarray(_random_codes(rng, fmt, k, n))
+    sf = jnp.float32(0.013)
+    got = elp_bsd_matmul(x, codes, sf, fmt, interpret=True)
+    want = kref.elp_bsd_matmul_ref(x, codes, sf, fmt)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (128, 512, 256)])
+def test_kernel_matches_ref_nibble(m, k, n):
+    fmt = FORMAT_A
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    packed = jnp.asarray(rng.integers(0, 256, size=(k // 2, n)).astype(np.uint8))
+    sf = jnp.float32(0.05)
+    got = elp_bsd_matmul(x, packed, sf, fmt, nibble=True, interpret=True)
+    want = kref.elp_bsd_matmul_ref(x, packed, sf, fmt, nibble=True)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kernel_dtypes(dtype):
+    fmt = FORMAT_C
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(128, 128)), dtype)
+    codes = jnp.asarray(_random_codes(rng, fmt, 128, 128))
+    sf = jnp.float32(0.02)
+    got = elp_bsd_matmul(x, codes, sf, fmt, interpret=True)
+    want = kref.elp_bsd_matmul_ref(x, codes, sf, fmt, out_dtype=dtype)
+    assert got.dtype == dtype
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=2e-2, atol=2e-2
+    )
+
+
+@pytest.mark.parametrize("blocks", [(128, 128, 128), (256, 128, 256)])
+def test_kernel_block_shapes(blocks):
+    bm, bn, bk = blocks
+    fmt = FORMAT_D
+    rng = np.random.default_rng(3)
+    m, k, n = 256, 512, 256
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    codes = jnp.asarray(_random_codes(rng, fmt, k, n))
+    sf = jnp.float32(0.017)
+    got = elp_bsd_matmul(x, codes, sf, fmt, block_m=bm, block_n=bn, block_k=bk, interpret=True)
+    want = kref.elp_bsd_matmul_ref(x, codes, sf, fmt)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+def test_pack_weight_roundtrip_and_padding():
+    """pack_weight → dequantize must reproduce the compensated quantized
+    values bit-exactly, including odd K (nibble pad) and non-tile shapes."""
+    rng = np.random.default_rng(4)
+    w = jnp.asarray(rng.normal(size=(131, 96)) * 0.1, jnp.float32)
+    pw, vals = pack_weight(w, FORMAT_A, compensate=True, group_axes=(0,))
+    assert pw.nibble and pw.codes.shape == (66, 96)  # ceil(131/2) = 66
+    np.testing.assert_allclose(dequantize(pw), vals, rtol=0, atol=0)
+
+    x = jnp.asarray(rng.normal(size=(7, 131)), jnp.float32)
+    got = quantized_matmul(x, pw, interpret=True)
+    want = jnp.dot(x, vals)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+def test_quantized_matmul_xla_path_matches_pallas():
+    rng = np.random.default_rng(5)
+    w = jnp.asarray(rng.normal(size=(256, 192)) * 0.05, jnp.float32)
+    pw, _ = pack_weight(w, FORMAT_C, compensate=False)
+    x = jnp.asarray(rng.normal(size=(64, 256)), jnp.float32)
+    a = quantized_matmul(x, pw, impl="xla")
+    b = quantized_matmul(x, pw, impl="pallas", interpret=True)
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-4)
+
+
+def test_decode_values_matches_numpy_oracle():
+    """jnp decode (kernel path) vs numpy bit-level decode (core)."""
+    from repro.core.elp_bsd import decode_codes
+
+    rng = np.random.default_rng(6)
+    for fmt in (FORMAT_A, FORMAT_B, FORMAT_C, FORMAT_D):
+        codes = rng.integers(0, 2 ** fmt.bits_per_weight, size=(64,))
+        got = kref.decode_values(jnp.asarray(codes, jnp.int32), fmt)
+        want = decode_codes(codes, fmt)
+        np.testing.assert_allclose(got, want.astype(np.float32), rtol=0, atol=0)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention kernel
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("b,h,s,hd", [(1, 2, 256, 64), (2, 4, 384, 128)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_matches_dot(b, h, s, hd, causal):
+    from repro.kernels.flash_attention import flash_attention
+    from repro.models.layers import attention_dot
+
+    rng = np.random.default_rng(7)
+    q = jnp.asarray(rng.normal(size=(b, h, s, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, h, s, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, h, s, hd)), jnp.float32)
+    got = flash_attention(q, k, v, causal=causal, block_q=128, block_k=128, interpret=True)
+    # attention_dot uses [B, S, H, hd] layout
+    tr = lambda x: jnp.moveaxis(x, 1, 2)
+    want = tr(attention_dot(tr(q), tr(k), tr(v), causal=causal))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    from repro.kernels.flash_attention import flash_attention
+    from repro.models.layers import attention_dot
+
+    rng = np.random.default_rng(8)
+    q = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), jnp.bfloat16)
+    got = flash_attention(q, k, v, interpret=True)
+    tr = lambda x: jnp.moveaxis(x, 1, 2)
+    want = tr(attention_dot(tr(q), tr(k), tr(v), causal=True))
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=3e-2, atol=3e-2
+    )

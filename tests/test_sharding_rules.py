@@ -1,0 +1,89 @@
+"""Unit tests for the divisibility-aware sharding rules.
+
+These run against a FAKE mesh description (no devices needed) by
+exercising the rule functions with a real 1-device mesh where only the
+axis-size arithmetic matters — so we monkey-create a Mesh-like object.
+"""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.runtime import sharding as shr
+
+
+class FakeMesh:
+    """Duck-typed mesh: sharding rules only read .shape."""
+
+    def __init__(self, shape: dict):
+        self.shape = shape
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+MESH3 = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def _spec(name, shape, mesh=MESH):
+    path = (jax.tree_util.DictKey(name),)
+    return shr.param_spec(path, shape, mesh)
+
+
+def test_column_parallel_prefers_last_dim():
+    assert _spec("wq", (40, 6144, 6144)) == P(None, None, "model")
+    assert _spec("w1", (4096, 11008)) == P(None, "model")
+
+
+def test_row_parallel_prefers_second_to_last():
+    assert _spec("wo", (40, 6144, 6144)) == P(None, "model", None)
+    assert _spec("w2", (11008, 4096)) == P("model", None)
+
+
+def test_vocab_parallel_with_fallback():
+    # divisible vocab -> vocab dim
+    assert _spec("embed", (49152, 6144)) == P("model", None)
+    # odd vocab (seamless 256206) -> falls back to d_model
+    assert _spec("embed", (256206, 1024)) == P(None, "model")
+    assert _spec("lm_head", (1024, 256206)) == P("model", None)
+
+
+def test_expert_sharding():
+    assert _spec("we1", (61, 384, 7168, 2048)) == P(None, "model", None, None)
+
+
+def test_norms_replicated():
+    assert _spec("final_norm", (4096,)) == P()
+    assert _spec("ln1", (40, 4096)) == P()
+
+
+def test_packed_weight_codes_inherit_parent_rule():
+    path = (jax.tree_util.DictKey("wq"), jax.tree_util.GetAttrKey("codes"))
+    assert shr.param_spec(path, (36, 2048, 4096), MESH) == P(None, None, "model")
+    path_sf = (jax.tree_util.DictKey("wq"), jax.tree_util.GetAttrKey("sf"))
+    assert shr.param_spec(path_sf, (36, 1, 1), MESH) == P()
+
+
+def test_non_divisible_falls_back_to_replication():
+    # 56-head q proj output 7168 divides; a deliberately odd dim doesn't
+    assert _spec("wq", (10, 30, 30)) == P()
+
+
+def test_input_spec_divisibility():
+    assert shr.input_spec((256, 4096), MESH) == P(("data",), None)
+    assert shr.input_spec((256, 4096), MESH3) == P(("pod", "data"), None)
+    # long_500k batch=1: replicate
+    assert shr.input_spec((1, 524288), MESH) == P(None, None)
+
+
+def test_cache_spec_head_then_hd_then_seq():
+    # kv=4 heads don't divide 16, hd=128 does
+    s = shr.cache_spec((), (40, 128, 32768, 4, 128), MESH)
+    assert tuple(s) == (None, "data", None, None, "model")
+    # flash layout: seq takes the model axis
+    s2 = shr.cache_spec((), (40, 128, 32768, 4, 128), MESH, prefer_seq=True)
+    assert tuple(s2) == (None, "data", "model", None, None)
+
+
+def test_zero1_extends_over_data():
+    base = P(None, None, "model")
+    z = shr.zero1_spec(base, (40, 4096, 11008), MESH)
+    assert tuple(z) == (None, "data", "model")

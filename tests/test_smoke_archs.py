@@ -1,0 +1,94 @@
+"""Per-architecture smoke tests: REDUCED config of the same family runs
+one forward/train step on CPU; asserts output shapes and no NaNs.
+
+The full configs are exercised only via the dry-run (ShapeDtypeStruct,
+no allocation) — see launch/dryrun.py.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import get_model
+
+
+def _tiny_batch(cfg, key, b=2, s=32):
+    ks = jax.random.split(key, 3)
+    batch = {}
+    if cfg.family in ("encdec", "audio"):
+        batch["frontend"] = jax.random.normal(ks[0], (b, s, cfg.d_model), cfg.dtype)
+        batch["tokens"] = jax.random.randint(ks[1], (b, s), 0, cfg.vocab)
+    elif cfg.frontend_tokens:
+        f = cfg.frontend_tokens
+        batch["frontend"] = jax.random.normal(ks[0], (b, f, cfg.d_model), cfg.dtype)
+        batch["tokens"] = jax.random.randint(ks[1], (b, s - f), 0, cfg.vocab)
+    else:
+        batch["tokens"] = jax.random.randint(ks[1], (b, s), 0, cfg.vocab)
+    batch["labels"] = jax.random.randint(ks[2], batch["tokens"].shape, 0, cfg.vocab)
+    return batch
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_smoke_train_step(arch_id):
+    cfg = get_config(arch_id).reduced()
+    api = get_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = api.init_params(cfg, key)
+    batch = _tiny_batch(cfg, key)
+
+    loss, grads = jax.value_and_grad(lambda p: api.loss_fn(p, cfg, batch))(params)
+    assert jnp.isfinite(loss), (arch_id, loss)
+    gnorm = sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+    assert jnp.isfinite(gnorm) and gnorm > 0, arch_id
+    # one SGD step must change the loss
+    new_params = jax.tree.map(lambda p, g: p - 0.1 * g.astype(p.dtype), params, grads)
+    loss2 = api.loss_fn(new_params, cfg, batch)
+    assert jnp.isfinite(loss2)
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_smoke_prefill_decode(arch_id):
+    cfg = get_config(arch_id).reduced()
+    api = get_model(cfg)
+    key = jax.random.PRNGKey(1)
+    params = api.init_params(cfg, key)
+    b, s = 2, 16
+    batch = _tiny_batch(cfg, key, b=b, s=s)
+    batch.pop("labels")
+    cache = api.init_cache(cfg, b, 32)
+    logits, cache = api.prefill(params, cfg, batch, cache)
+    assert logits.shape == (b, 1, cfg.vocab), (arch_id, logits.shape)
+    assert bool(jnp.isfinite(logits).all()), arch_id
+
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    prompt_len = batch["tokens"].shape[1] + (
+        batch.get("frontend").shape[1] if cfg.family == "vlm" and "frontend" in batch else 0
+    )
+    logits2, cache = api.decode_step(params, cfg, tok, cache, jnp.int32(prompt_len))
+    assert logits2.shape == (b, 1, cfg.vocab), arch_id
+    assert bool(jnp.isfinite(logits2).all()), arch_id
+
+
+def test_rglru_ring_cache_crosses_window_boundary():
+    """Ring-buffer window cache: decode must match full forward even
+    after the write position wraps past the window size."""
+    from repro.models import rglru as R
+    from repro.configs import get_config
+    import numpy as np
+
+    cfg = get_config("recurrentgemma_2b").reduced()
+    key = jax.random.PRNGKey(0)
+    p = R.init_params(cfg, key)
+    toks = jax.random.randint(key, (2, 24), 0, cfg.vocab)
+    cache = R.init_cache(cfg, 2, 64)
+    assert cache["k"].shape[2] == cfg.window  # ring, not max_len
+    lg, cache = R.prefill(p, cfg, toks, cache)
+    cur = toks
+    for _ in range(6):
+        nxt = jnp.argmax(lg, -1).astype(jnp.int32)
+        lg, cache = R.decode_step(p, cfg, nxt, cache, jnp.int32(cur.shape[1]))
+        cur = jnp.concatenate([cur, nxt], 1)
+    full = R.forward(p, cfg, cur)
+    np.testing.assert_allclose(
+        np.asarray(lg[:, 0]), np.asarray(full[:, -1]), rtol=2e-3, atol=2e-3
+    )
