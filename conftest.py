@@ -1,0 +1,12 @@
+"""Repo-level pytest bootstrap: put ``src/`` on sys.path.
+
+Lets a bare ``pytest`` (and ``python -m pytest``) resolve ``repro.*``
+without requiring ``PYTHONPATH=src``; the repo root itself is already
+on the path (pytest rootdir), which covers ``benchmarks.*`` imports.
+"""
+import os
+import sys
+
+_SRC = os.path.join(os.path.dirname(os.path.abspath(__file__)), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)

@@ -1,0 +1,42 @@
+"""Version-compatibility shims for the jax / Pallas APIs this repo uses.
+
+The codebase targets the modern spellings (``jax.shard_map`` with
+``check_vma``, ``pltpu.CompilerParams``); this module maps them onto
+whatever the installed jax provides (0.4.x ships
+``jax.experimental.shard_map.shard_map(check_rep=...)`` and
+``pltpu.TPUCompilerParams``). Import from here instead of guessing:
+
+    from repro.compat import shard_map, pallas_compiler_params
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.experimental.pallas import tpu as pltpu
+
+try:  # jax >= 0.5: top-level export, `check_vma` kwarg
+    from jax import shard_map as _shard_map
+
+    _SHARD_MAP_REP_KWARG = "check_vma"
+except ImportError:  # jax 0.4.x: experimental module, `check_rep` kwarg
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    _SHARD_MAP_REP_KWARG = "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` with the replication-check kwarg renamed as needed."""
+    kwargs = {_SHARD_MAP_REP_KWARG: check_vma}
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)
+
+
+# pltpu.CompilerParams was called TPUCompilerParams through jax 0.4.x.
+_COMPILER_PARAMS_CLS = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams"
+)
+
+
+def pallas_compiler_params(**kwargs: Any):
+    """Construct Pallas TPU compiler params under either class name."""
+    return _COMPILER_PARAMS_CLS(**kwargs)

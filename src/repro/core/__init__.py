@@ -20,6 +20,14 @@ from repro.core.elp_bsd import (
     storage_bytes,
     unpack_codes,
 )
+from repro.core.convert import (
+    ConvertedTensor,
+    bitpack,
+    convert_tensor,
+    default_group_axes,
+    nibble_pack,
+    sf_reduce_axes,
+)
 from repro.core.quantize import (
     QuantizedTensor,
     ca_levels,

@@ -43,17 +43,16 @@ def _compensate_one_group(w: Array, nn_idx: Array, levels_j: Array) -> Array:
     wf = w.astype(levels_j.dtype)
     mean_err = jnp.mean(q - wf)
 
-    # Flip target: the neighbouring level on the other side of w.
-    lv_n = levels_j.shape[0]
-    other = jnp.where(wf >= q, nn_idx + 1, nn_idx - 1)
-    valid = (other >= 0) & (other < lv_n)
-    flip_idx = jnp.where(valid, other, nn_idx).astype(nn_idx.dtype)
+    # Flip target: the neighbouring level on the other side of w (edge
+    # elements get flip_idx == nn_idx, which zeroes their delta below).
+    flip_idx = second_neighbor_idx(wf, levels_j, nn_idx).astype(nn_idx.dtype)
     q_flip = levels_j[flip_idx]
     delta = q_flip - q  # change in group error-sum if flipped
 
-    # Candidates: flips that move the mean toward zero (and are real flips).
+    # Candidates: flips that move the mean toward zero (and are real
+    # flips — levels are unique, so delta == 0 iff flip_idx == nn_idx).
     opposes = jnp.sign(delta) == -jnp.sign(mean_err)
-    candidate = opposes & valid & (delta != 0.0)
+    candidate = opposes & (delta != 0.0)
 
     # Cost (paper: |S - SO|): distance from the raw value to the flip level.
     cost = jnp.where(candidate, jnp.abs(wf - q_flip), jnp.inf)

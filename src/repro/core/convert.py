@@ -1,0 +1,202 @@
+"""The unified conversion engine: one traced Sec. V implementation.
+
+Every path that turns float weights into ELP_BSD levels — the float
+reference pipeline (:mod:`repro.core.methodology`), matmul packing
+(:func:`repro.kernels.ops.pack_weight`), and stacked serving conversion
+(:func:`repro.runtime.quantized_params.quantize_stacked`) — routes
+through :func:`convert_tensor` here. It is the ONLY place the
+SF → TQL → nearest-neighbour → Algorithm 1 sequence is implemented
+(DESIGN.md, "Conversion engine").
+
+The engine is pure jnp (jit- and ``eval_shape``-compatible) and layout
+agnostic: it handles matmul stacks ``[..., K, N]`` and conv
+``[H, W, Cin, Cout]`` weights alike. Two knobs parameterize it:
+
+* ``granularity`` — which axes share one scale factor:
+    - ``per_tensor``: one SF for the whole tensor (paper Sec. V),
+    - ``per_slice``: one SF per trailing ``[K, N]`` slice of a stack
+      (scan layers / MoE experts),
+    - ``per_channel``: one SF per output channel (last axis; ``N`` for
+      matmuls, ``Cout`` for convs).
+* ``group_axes`` — the axes Algorithm 1 averages the error over: the
+  contracting dim ``(-2,)`` for matmuls, the spatial dims ``(0, 1)``
+  for convs (the paper's intra-channel grouping). Groups must lie
+  inside one scale cell (checked), so compensation on the normalized
+  weights is exact.
+
+Emission helpers turn the level indices into storage formats: u8 raw
+codes (:meth:`ConvertedTensor.codes`), nibble-packed 4-bit pairs
+(:func:`nibble_pack`), or the dense bit-packed HBM layout
+(:func:`bitpack`, host-side).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.elp_bsd import ElpBsdFormat, PRESET_FORMATS, pack_codes
+from repro.core.quantize import nn_quantize_idx
+
+Array = jax.Array
+F32 = jnp.float32
+
+GRANULARITIES = ("per_tensor", "per_slice", "per_channel")
+
+
+def sf_reduce_axes(granularity: str, ndim: int) -> tuple[int, ...]:
+    """Axes reduced (shared) by one scale factor for a given layout."""
+    if granularity == "per_tensor":
+        return tuple(range(ndim))
+    if granularity == "per_slice":
+        if ndim < 2:
+            return tuple(range(ndim))
+        return (ndim - 2, ndim - 1)
+    if granularity == "per_channel":
+        if ndim < 2:
+            return tuple(range(ndim))
+        return tuple(range(ndim - 1))
+    raise ValueError(f"unknown granularity {granularity!r}; pick from {GRANULARITIES}")
+
+
+def default_group_axes(ndim: int) -> tuple[int, ...]:
+    """Paper's Algorithm 1 grouping per layout: spatial dims for conv
+    ``[H, W, Cin, Cout]``, the contracting dim for matmul stacks."""
+    if ndim == 4:
+        return (0, 1)
+    if ndim >= 2:
+        return (ndim - 2,)
+    return (0,)
+
+
+@dataclasses.dataclass
+class ConvertedTensor:
+    """Engine output: level indices + broadcastable scale factors.
+
+    A registered pytree (jit/scan/eval_shape friendly). ``level_idx``
+    has the source tensor's shape; ``sf`` keeps reduced axes as size-1
+    dims so ``levels[level_idx] * sf`` broadcasts back exactly.
+    """
+
+    level_idx: Array  # int32, shape == source shape
+    sf: Array  # float32, keepdims-broadcastable against level_idx
+    fmt_name: str
+
+    @property
+    def fmt(self) -> ElpBsdFormat:
+        return PRESET_FORMATS[self.fmt_name]
+
+    @property
+    def levels(self) -> Array:
+        return jnp.asarray(self.fmt.levels(), F32)
+
+    @property
+    def values(self) -> Array:
+        """Dequantized float32 values (drop-in replacement weights)."""
+        return self.levels[self.level_idx] * self.sf
+
+    def codes(self) -> Array:
+        """Raw bit codes, one uint8 per weight (same shape as source)."""
+        return jnp.asarray(self.fmt.level_codes(), jnp.int32)[self.level_idx].astype(
+            jnp.uint8
+        )
+
+    def tree_flatten_with_keys(self):
+        ga = jax.tree_util.GetAttrKey
+        return ((ga("level_idx"), self.level_idx), (ga("sf"), self.sf)), (self.fmt_name,)
+
+    def tree_flatten(self):
+        return (self.level_idx, self.sf), (self.fmt_name,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+
+jax.tree_util.register_pytree_with_keys_class(ConvertedTensor)
+
+
+def convert_tensor(
+    w: Array,
+    fmt: ElpBsdFormat | str,
+    *,
+    granularity: str = "per_tensor",
+    compensate: bool = True,
+    group_axes: Sequence[int] | None = None,
+) -> ConvertedTensor:
+    """SF → TQL → nearest-neighbour → Algorithm 1, fully traced.
+
+    Args:
+      w: float weights, any rank (matmul stacks ``[..., K, N]``, conv
+        ``[H, W, Cin, Cout]``, or 1-D vectors).
+      fmt: an :class:`ElpBsdFormat` or a :data:`PRESET_FORMATS` name.
+      granularity: scale-factor sharing — see module docstring.
+      compensate: run Algorithm 1 error compensation.
+      group_axes: compensation group axes (defaults by layout via
+        :func:`default_group_axes`); must be a subset of the axes one
+        scale factor spans.
+    """
+    if isinstance(fmt, str):
+        fmt = PRESET_FORMATS[fmt]
+    wf = jnp.asarray(w, F32)
+    ndim = wf.ndim
+
+    reduce_axes = sf_reduce_axes(granularity, ndim)
+    mx = jnp.max(jnp.abs(wf), axis=reduce_axes, keepdims=True)
+    # Tiny clamp instead of a zero-check keeps all-zero cells dequantizing
+    # to ~0 even for formats without a zero level (FORMAT_A).
+    sf = jnp.maximum(mx / (2.0 ** fmt.max_shift), 1e-20)
+    wn = wf / sf
+
+    levels = fmt.levels()  # host numpy, compile-time constant
+    idx = nn_quantize_idx(wn, levels)
+
+    if compensate:
+        if group_axes is None:
+            group_axes = default_group_axes(ndim)
+        group_axes = tuple(a % ndim for a in group_axes)
+        if not set(group_axes) <= set(reduce_axes):
+            raise ValueError(
+                f"Algorithm 1 groups {group_axes} cross scale cells of "
+                f"granularity {granularity!r} (sf spans axes {reduce_axes}); "
+                "the mean error is only well-defined within one scale cell"
+            )
+        # Grouping happens on the normalized weights against the unscaled
+        # level table — exact, because sf is constant within each group.
+        from repro.core.compensate import _from_groups, _to_groups, compensate_groups
+
+        wg, perm, t_shape = _to_groups(wn, group_axes)
+        ig, _, _ = _to_groups(idx, group_axes)
+        idx = _from_groups(compensate_groups(wg, ig, levels), perm, t_shape)
+
+    return ConvertedTensor(level_idx=idx.astype(jnp.int32), sf=sf.astype(F32), fmt_name=fmt.name)
+
+
+# ---------------------------------------------------------------------------
+# Code emission
+# ---------------------------------------------------------------------------
+def nibble_pack(codes: Array, axis: int = -2) -> Array:
+    """Pack 4-bit codes two-per-byte along ``axis`` (low nibble first).
+
+    Odd lengths are padded with code 0 — which may decode to a NONZERO
+    value (FORMAT_A's code 0 is +1). Consumers must either slice the
+    logical length off after decode (``ops.dequantize``) or feed the pad
+    rows zero activations (``ops.quantized_matmul``); the parity test
+    covers both.
+    """
+    axis = axis % codes.ndim
+    if codes.shape[axis] % 2:
+        widths = [(0, 0)] * codes.ndim
+        widths[axis] = (0, 1)
+        codes = jnp.pad(codes, widths)
+    even = jax.lax.slice_in_dim(codes, 0, None, 2, axis)
+    odd = jax.lax.slice_in_dim(codes, 1, None, 2, axis)
+    return (even | (odd << 4)).astype(jnp.uint8)
+
+
+def bitpack(ct: ConvertedTensor) -> np.ndarray:
+    """Dense host-side bit-packing at ``bits_per_weight`` (HBM layout)."""
+    return pack_codes(np.asarray(ct.codes()), ct.fmt)

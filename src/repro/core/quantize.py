@@ -30,17 +30,26 @@ Array = jax.Array
 # ---------------------------------------------------------------------------
 # Scale factor & TQL (Sec. V steps 2-3)
 # ---------------------------------------------------------------------------
-def scale_factor(w: Array | np.ndarray, fmt: ElpBsdFormat) -> float:
-    """Per-layer scale factor ``SF = max|W| / 2^{max shift}`` (Sec. V)."""
-    mx = float(jnp.max(jnp.abs(w)))
-    if mx == 0.0:
-        return 1.0
-    return mx / (2.0 ** fmt.max_shift)
+def scale_factor(w: Array | np.ndarray, fmt: ElpBsdFormat) -> Array:
+    """Per-layer scale factor ``SF = max|W| / 2^{max shift}`` (Sec. V).
+
+    Trace-safe: returns a jnp float32 scalar. Uses the same tiny clamp
+    as the conversion engine (all-zero tensors get SF = 1e-20, so they
+    dequantize to ~0 even for formats without a zero level).
+    """
+    mx = jnp.max(jnp.abs(jnp.asarray(w)))
+    return jnp.maximum(mx / (2.0 ** fmt.max_shift), 1e-20).astype(jnp.float32)
 
 
-def tql(fmt: ElpBsdFormat, sf: float) -> np.ndarray:
-    """Table of quantization levels for one layer: ``SF * levels``."""
-    return (fmt.levels() * sf).astype(np.float64)
+def tql(fmt: ElpBsdFormat, sf: float | Array) -> np.ndarray | Array:
+    """Table of quantization levels for one layer: ``SF * levels``.
+
+    With a host float ``sf`` this is a float64 numpy table; with a
+    traced ``sf`` (from :func:`scale_factor`) it is a jnp array.
+    """
+    if isinstance(sf, (int, float)):
+        return (fmt.levels() * sf).astype(np.float64)
+    return jnp.asarray(fmt.levels(), jnp.float32) * sf
 
 
 # ---------------------------------------------------------------------------
@@ -133,15 +142,15 @@ class QuantizedTensor:
     Attributes:
       values: dequantized (float) values — drop-in replacement weights.
       level_idx: index into the TQL per element (int32).
-      sf: the layer scale factor.
+      sf: the layer scale factor (jnp scalar when traced).
       fmt: the ELP_BSD format (None for uniform/CA baselines).
-      levels: the scaled level table (numpy, host).
+      levels: the scaled level table (host numpy or traced jnp).
     """
 
     values: Array
     level_idx: Array
-    sf: float
-    levels: np.ndarray
+    sf: float | Array
+    levels: np.ndarray | Array
     fmt: ElpBsdFormat | None = None
 
     @property
@@ -157,8 +166,19 @@ class QuantizedTensor:
 
 
 def quantize_tensor(w: Array, fmt: ElpBsdFormat) -> QuantizedTensor:
-    """Sec. V steps 2-3 for one tensor: SF → TQL → NN quantization."""
-    sf = scale_factor(w, fmt)
-    levels = tql(fmt, sf)
-    vals, idx = nn_quantize(w, levels)
-    return QuantizedTensor(values=vals, level_idx=idx, sf=sf, levels=levels, fmt=fmt)
+    """Sec. V steps 2-3 for one tensor: SF → TQL → NN quantization.
+
+    Thin wrapper over the unified engine (:mod:`repro.core.convert`)
+    at per-tensor scale granularity.
+    """
+    from repro.core.convert import convert_tensor  # circular-import guard
+
+    ct = convert_tensor(w, fmt, granularity="per_tensor", compensate=False)
+    sf = ct.sf.reshape(())
+    return QuantizedTensor(
+        values=ct.values.astype(w.dtype),
+        level_idx=ct.level_idx,
+        sf=sf,
+        levels=tql(fmt, sf),
+        fmt=fmt,
+    )

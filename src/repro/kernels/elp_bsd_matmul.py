@@ -35,6 +35,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import pallas_compiler_params
 from repro.core.elp_bsd import ElpBsdFormat
 from repro.kernels.ref import decode_values, unpack_nibbles_k
 
@@ -113,7 +114,7 @@ def elp_bsd_matmul(
             # float32 accumulator tile held in VMEM across the K steps
             pltpu.VMEM((block_m, block_n), jnp.float32)
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pallas_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,

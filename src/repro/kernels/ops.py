@@ -1,9 +1,14 @@
 """Jitted public ops over packed ELP_BSD weights.
 
 ``PackedWeight`` is the runtime artifact of conversion: a code buffer
-(uint8, optionally nibble-packed), the per-layer scale factor, and the
+(uint8, optionally nibble-packed), per-cell scale factors, and the
 static format. It is a registered pytree so it flows through jit / pjit
 / scan like any weight.
+
+All conversion goes through the unified engine
+(:func:`repro.core.convert.convert_tensor`); this module only adds the
+storage layout (nibble packing, logical-shape bookkeeping) and the
+execution paths:
 
 ``quantized_matmul`` picks between:
   * ``impl="pallas"`` — the fused decode+matmul kernel (TPU target,
@@ -11,6 +16,11 @@ static format. It is a registered pytree so it flows through jit / pjit
   * ``impl="xla"``    — dequantize-then-dot in plain jnp. Same HBM story
     (codes are the stored operand), used inside pjit'd serve steps where
     we want XLA to fuse the decode into the matmul across shards.
+
+Convolution weights pack through :func:`pack_conv_weight` (the 4-D
+``[H, W, Cin, Cout]`` tensor flattens to ``[H*W*Cin, Cout]`` im2col
+layout; ``source_shape`` remembers the conv layout for the XLA path) and
+execute via :func:`repro.kernels.conv.quantized_conv2d`.
 """
 from __future__ import annotations
 
@@ -22,13 +32,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.elp_bsd import ElpBsdFormat, PRESET_FORMATS, encode_to_codes
-from repro.core.compensate import compensated_quantize
-from repro.core.quantize import quantize_tensor
+from repro.core.convert import convert_tensor, nibble_pack
+from repro.core.elp_bsd import ElpBsdFormat, PRESET_FORMATS
 from repro.kernels import ref as kref
 from repro.kernels.elp_bsd_matmul import elp_bsd_matmul
 
 Array = jax.Array
+F32 = jnp.float32
 
 
 @dataclasses.dataclass
@@ -37,16 +47,20 @@ class PackedWeight:
 
     Attributes:
       codes: uint8 code buffer; ``[..., K, N]`` (u8 mode) or
-        ``[..., K//2, N]`` (nibble mode, 4-bit formats only). Leading
-        dims are stack dims (scan layers / experts); ``lax.scan`` and
-        indexing slice them off naturally because PackedWeight is a
+        ``[..., ceil(K/2), N]`` (nibble mode, 4-bit formats only).
+        Leading dims are stack dims (scan layers / experts); ``lax.scan``
+        and indexing slice them off naturally because PackedWeight is a
         registered pytree whose aux data describes only the logical
         trailing (K, N).
-      sf: per-(stack) scale factors, float32, shape ``[..., 1, 1]``
-        (broadcastable against the decoded codes).
+      sf: scale factors, float32, keepdims-broadcastable against the
+        decoded ``[..., K, N]`` codes — ``[..., 1, 1]`` for per-tensor /
+        per-slice conversion, ``[..., 1, N]`` for per-output-channel.
       fmt_name: key into :data:`repro.core.elp_bsd.PRESET_FORMATS`.
       nibble: whether codes are nibble-packed along K.
       shape: logical (K, N) of the trailing weight dims.
+      source_shape: original nd layout for non-matmul weights (set to
+        ``(kh, kw, cin, cout)`` by :func:`pack_conv_weight`; None for
+        plain matmuls).
     """
 
     codes: Array
@@ -54,6 +68,7 @@ class PackedWeight:
     fmt_name: str
     nibble: bool
     shape: tuple[int, int]
+    source_shape: tuple[int, ...] | None = None
 
     @property
     def fmt(self) -> ElpBsdFormat:
@@ -69,10 +84,16 @@ class PackedWeight:
             self.fmt_name,
             self.nibble,
             self.shape,
+            self.source_shape,
         )
 
     def tree_flatten(self):
-        return (self.codes, self.sf), (self.fmt_name, self.nibble, self.shape)
+        return (self.codes, self.sf), (
+            self.fmt_name,
+            self.nibble,
+            self.shape,
+            self.source_shape,
+        )
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -85,42 +106,90 @@ jax.tree_util.register_pytree_with_keys_class(PackedWeight)
 
 def pack_weight(
     w: Array,
-    fmt: ElpBsdFormat,
+    fmt: ElpBsdFormat | str,
     *,
     compensate: bool = True,
-    group_axes: Sequence[int] = (0,),
+    group_axes: Sequence[int] | None = None,
+    granularity: str = "per_tensor",
     nibble: bool | None = None,
 ) -> tuple[PackedWeight, Array]:
-    """Convert a float weight matrix into (packed codes, dequantized values).
+    """Convert a ``[..., K, N]`` weight into (packed codes, dequantized values).
 
-    Runs Sec. V quantization (+ Algorithm 1 when ``compensate``) and
-    encodes level indices to raw bit codes. Returns the dequantized
-    values too so callers can decide between holding floats (training)
-    or codes (serving).
+    Thin wrapper over the conversion engine: runs Sec. V quantization
+    (+ Algorithm 1 when ``compensate``, grouped over the contracting dim
+    by default) at the requested scale ``granularity``, then encodes
+    level indices to raw bit codes (nibble-packed along K for 4-bit
+    formats; odd K pads one code row, sliced off on decode). Returns the
+    dequantized values too so callers can decide between holding floats
+    (training) or codes (serving).
     """
-    assert w.ndim == 2, "pack_weight operates on [K, N] matmul weights"
+    if isinstance(fmt, str):
+        fmt = PRESET_FORMATS[fmt]
+    assert w.ndim >= 2, "pack_weight operates on [..., K, N] matmul weights"
     if nibble is None:
         nibble = fmt.bits_per_weight <= 4
-    qt = (
-        compensated_quantize(w, fmt, group_axes)
-        if compensate
-        else quantize_tensor(w, fmt)
+    if group_axes is None:
+        # Matmul contract: trailing dims are [K, N]; Algorithm 1 groups the
+        # contracting rows of each output column. (The engine's rank-based
+        # default would read a 4-D stack [L, E, K, N] as a conv layout.)
+        group_axes = (w.ndim - 2,)
+    ct = convert_tensor(
+        w, fmt, granularity=granularity, compensate=compensate, group_axes=group_axes
     )
-    codes_np = encode_to_codes(np.asarray(qt.level_idx), fmt).astype(np.uint8)
+    codes = ct.codes()
     if nibble:
-        k, n = codes_np.shape
-        if k % 2:
-            codes_np = np.concatenate([codes_np, np.zeros((1, n), np.uint8)], 0)
-            k += 1
-        codes_np = (codes_np[0::2] | (codes_np[1::2] << 4)).astype(np.uint8)
+        codes = nibble_pack(codes, axis=-2)
     pw = PackedWeight(
-        codes=jnp.asarray(codes_np),
-        sf=jnp.float32(qt.sf),
+        codes=codes,
+        sf=ct.sf,
         fmt_name=fmt.name,
         nibble=bool(nibble),
-        shape=(int(w.shape[0]), int(w.shape[1])),
+        shape=(int(w.shape[-2]), int(w.shape[-1])),
     )
-    return pw, qt.values
+    return pw, ct.values.astype(w.dtype)
+
+
+def pack_conv_weight(
+    w: Array,
+    fmt: ElpBsdFormat | str,
+    *,
+    compensate: bool = True,
+    granularity: str = "per_tensor",
+    nibble: bool | None = None,
+) -> tuple[PackedWeight, Array]:
+    """Convert a conv ``[kh, kw, cin, cout]`` weight to im2col-packed codes.
+
+    Quantization and Algorithm 1 run on the conv layout (groups = the
+    spatial dims, the paper's intra-channel case); the emitted codes are
+    laid out ``[K=kh*kw*cin, N=cout]`` so the packed matmul kernel
+    consumes them directly on extracted patches. ``granularity`` may be
+    per-tensor or per-channel (per-slice has no meaning for one conv).
+    Returns the packed weight and the dequantized values in conv layout.
+    """
+    if isinstance(fmt, str):
+        fmt = PRESET_FORMATS[fmt]
+    assert w.ndim == 4, "pack_conv_weight operates on [kh, kw, cin, cout] weights"
+    if granularity == "per_slice":
+        raise ValueError("per_slice granularity is for stacked matmuls, not convs")
+    if nibble is None:
+        nibble = fmt.bits_per_weight <= 4
+    ct = convert_tensor(
+        w, fmt, granularity=granularity, compensate=compensate, group_axes=(0, 1)
+    )
+    kh, kw, cin, cout = w.shape
+    codes = ct.codes().reshape(kh * kw * cin, cout)
+    if nibble:
+        codes = nibble_pack(codes, axis=-2)
+    pw = PackedWeight(
+        codes=codes,
+        # sf varies along cout at most, so the [K, N] view is [1, -1].
+        sf=ct.sf.reshape(1, -1),
+        fmt_name=fmt.name,
+        nibble=bool(nibble),
+        shape=(kh * kw * cin, cout),
+        source_shape=(kh, kw, cin, cout),
+    )
+    return pw, ct.values.astype(w.dtype)
 
 
 def dequantize(pw: PackedWeight) -> Array:
@@ -128,6 +197,12 @@ def dequantize(pw: PackedWeight) -> Array:
     codes = kref.unpack_nibbles_k(pw.codes) if pw.nibble else pw.codes
     w = kref.decode_values(codes, pw.fmt) * pw.sf
     return w[..., : pw.shape[0], : pw.shape[1]]
+
+
+def dequantize_nd(pw: PackedWeight) -> Array:
+    """Decode to the source layout (conv ``[kh, kw, cin, cout]``, etc.)."""
+    w = dequantize(pw)
+    return w.reshape(pw.source_shape) if pw.source_shape is not None else w
 
 
 def _pad_to(x: Array, axis: int, mult: int) -> Array:
@@ -165,24 +240,34 @@ def quantized_matmul(
         return out.reshape(*lead, n)
     if impl != "pallas":
         raise ValueError(f"unknown impl {impl!r}")
+    if pw.codes.ndim != 2:
+        raise ValueError("pallas path takes a single [K, N] weight; use impl='xla' for stacks")
 
     m0 = x2.shape[0]
     # Pad M and K on activations (zero activations contribute zero even
-    # against garbage codes); pad N on codes and slice the output.
+    # against garbage codes — including the nibble pad row); pad N on
+    # codes and slice the output.
     x2 = _pad_to(_pad_to(x2, 0, block_m), 1, block_k)
     codes = pw.codes
     krow = block_k // 2 if pw.nibble else block_k
     codes = _pad_to(_pad_to(codes, 0, krow), 1, block_n)
+    # Per-channel sf scales output columns, so it factors out of the
+    # matmul: run the kernel unscaled and apply sf on the sliced output.
+    per_channel = pw.sf.size > 1
+    sf_kernel = jnp.ones((), jnp.float32) if per_channel else pw.sf
     out = elp_bsd_matmul(
         x2,
         codes,
-        pw.sf,
+        sf_kernel,
         pw.fmt,
         nibble=pw.nibble,
         block_m=block_m,
         block_n=block_n,
         block_k=block_k,
-        out_dtype=out_dtype,
+        out_dtype=jnp.float32 if per_channel else out_dtype,
         interpret=interpret,
     )
-    return out[:m0, :n].reshape(*lead, n)
+    out = out[:m0, :n]
+    if per_channel:
+        out = (out * pw.sf.reshape(1, n)).astype(out_dtype)
+    return out.reshape(*lead, n)

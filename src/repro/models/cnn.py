@@ -141,15 +141,30 @@ def init_params(spec: CnnSpec, key: Array, dtype=F32) -> dict[str, Array]:
 
 
 def forward(
-    params: dict[str, Array], spec: CnnSpec, x: Array, act_bits: int | None = None
+    params: dict[str, Array],
+    spec: CnnSpec,
+    x: Array,
+    act_bits: int | None = None,
+    *,
+    impl: str = "xla",
+    interpret: bool | None = None,
 ) -> Array:
     """x: [B, H, W, C] images → logits [B, n_classes].
 
     ``act_bits`` simulates uniform fixed-point activation quantization
     (Sec. V step 1: the critical-bit-width search, dynamic per-tensor
     range as in the paper's FP implementation).
+
+    Weights may be float arrays OR :class:`~repro.kernels.ops.PackedWeight`
+    leaves (see :func:`quantize_params`): packed convs run through
+    :func:`~repro.kernels.conv.quantized_conv2d` and packed fc layers
+    through ``quantized_matmul``, so the whole network executes on
+    ELP_BSD codes end-to-end. ``impl`` selects the packed execution path
+    ("xla" dequant-fused fallback, "pallas" fused decode+matmul kernel).
     """
     from repro.core.quantize import fake_quant_dynamic
+    from repro.kernels.conv import quantized_conv2d
+    from repro.kernels.ops import PackedWeight, quantized_matmul
 
     def q(t):
         return fake_quant_dynamic(t, act_bits) if act_bits else t
@@ -161,13 +176,25 @@ def forward(
     for l in spec.layers:
         if isinstance(l, Conv):
             w = params[f"conv{idx}_w"]
-            x = jax.lax.conv_general_dilated(
-                x.astype(F32),
-                w.astype(F32),
-                window_strides=(l.stride, l.stride),
-                padding="SAME",
-                dimension_numbers=("NHWC", "HWIO", "NHWC"),
-            ) + params[f"conv{idx}_b"].astype(F32)
+            if isinstance(w, PackedWeight):
+                x = quantized_conv2d(
+                    x.astype(F32),
+                    w,
+                    stride=l.stride,
+                    padding="SAME",
+                    impl=impl,
+                    interpret=interpret,
+                    out_dtype=F32,
+                )
+            else:
+                x = jax.lax.conv_general_dilated(
+                    x.astype(F32),
+                    w.astype(F32),
+                    window_strides=(l.stride, l.stride),
+                    padding="SAME",
+                    dimension_numbers=("NHWC", "HWIO", "NHWC"),
+                )
+            x = x + params[f"conv{idx}_b"].astype(F32)
             x = q(jax.nn.relu(x))
             idx += 1
         elif isinstance(l, Pool):
@@ -178,11 +205,61 @@ def forward(
             if not flat:
                 x = x.reshape(x.shape[0], -1)
                 flat = True
-            x = jnp.dot(x, params[f"fc{idx}_w"].astype(F32)) + params[f"fc{idx}_b"].astype(F32)
+            w = params[f"fc{idx}_w"]
+            if isinstance(w, PackedWeight):
+                x = quantized_matmul(
+                    x.astype(F32), w, impl=impl, interpret=interpret, out_dtype=F32
+                )
+            else:
+                x = jnp.dot(x, w.astype(F32))
+            x = x + params[f"fc{idx}_b"].astype(F32)
             idx += 1
             if idx < n_layers:
                 x = q(jax.nn.relu(x))
     return x
+
+
+def quantize_params(
+    params: dict[str, Array],
+    fmt,
+    *,
+    compensate: bool = True,
+    granularity: str = "per_tensor",
+    nibble: bool | None = None,
+) -> dict[str, Array]:
+    """Pack every conv/fc weight as a :class:`PackedWeight` (Sec. V + Alg. 1).
+
+    Biases stay in the model dtype (negligible bytes, accuracy-critical
+    — same policy as the LM serve path, DESIGN.md §4). The returned
+    pytree drops into :func:`forward`, which then runs end-to-end on
+    ELP_BSD codes.
+    """
+    from repro.kernels.ops import pack_conv_weight, pack_weight
+
+    out: dict[str, Array] = {}
+    for name, w in params.items():
+        if name.endswith("_w") and w.ndim == 4:
+            out[name] = pack_conv_weight(
+                w, fmt, compensate=compensate, granularity=granularity, nibble=nibble
+            )[0]
+        elif name.endswith("_w") and w.ndim == 2:
+            out[name] = pack_weight(
+                w, fmt, compensate=compensate, granularity=granularity, nibble=nibble
+            )[0]
+        else:
+            out[name] = w
+    return out
+
+
+def packed_weight_bytes(params: dict[str, Array]) -> int:
+    """Code+sf bytes of the packed weights (compression accounting)."""
+    from repro.kernels.ops import PackedWeight
+
+    total = 0
+    for w in params.values():
+        if isinstance(w, PackedWeight):
+            total += w.nbytes + w.sf.size * 4
+    return total
 
 
 def weight_group_axes(params: dict[str, Array]) -> dict[str, tuple[int, ...]]:

@@ -29,6 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.elp_bsd import FORMAT_A
+from repro.core.quantize import nn_quantize_idx
 
 Array = jax.Array
 F32 = jnp.float32
@@ -55,8 +56,7 @@ def _quant_elp4(x: Array, block: int = 256) -> tuple[Array, Array]:
     flat = jnp.pad(flat, (0, pad)).reshape(-1, block)
     sf = jnp.max(jnp.abs(flat), axis=1, keepdims=True) / 128.0 + 1e-12
     scaled = flat / sf
-    mid = (_A4_LEVELS[1:] + _A4_LEVELS[:-1]) / 2.0
-    idx = jnp.searchsorted(mid, scaled, side="right").astype(jnp.int8)
+    idx = nn_quantize_idx(scaled, _A4_LEVELS).astype(jnp.int8)
     return idx, sf
 
 

@@ -3,8 +3,9 @@
 The conversion is the paper's Sec. V methodology applied per stacked
 layer slice — per-slice scale factor ``SF = max|W|/2^max_shift``,
 nearest-neighbour quantization against the format's level table, and
-Algorithm 1 compensation over the contracting-dim rows — implemented
-entirely in jnp so it both (a) jits for real conversions and (b)
+Algorithm 1 compensation over the contracting-dim rows. It is a thin
+wrapper over the unified engine (:mod:`repro.core.convert`, granularity
+``per_slice``), so it both (a) jits for real conversions and (b)
 ``eval_shape``s for the allocation-free dry-run (a 1T-param Kimi-K2
 conversion is "performed" abstractly in milliseconds).
 
@@ -20,12 +21,10 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.core.compensate import compensate_groups
 from repro.core.elp_bsd import ElpBsdFormat, PRESET_FORMATS
-from repro.kernels.ops import PackedWeight
+from repro.kernels.ops import PackedWeight, pack_weight
 
 Array = jax.Array
 F32 = jnp.float32
@@ -43,39 +42,15 @@ FMT_BY_TAG = {"elp4": "elp_bsd_a4", "elp8": "elp_bsd_c6"}
 def quantize_stacked(
     w: Array, fmt: ElpBsdFormat, *, compensate: bool = True, nibble: bool | None = None
 ) -> PackedWeight:
-    """Encode ``w[..., K, N]`` with per-stack-slice scale factors."""
-    if nibble is None:
-        nibble = fmt.bits_per_weight <= 4
-    lead = w.shape[:-2]
-    k, n = w.shape[-2:]
-    wf = w.astype(F32)
-    sf = jnp.max(jnp.abs(wf), axis=(-2, -1), keepdims=True) / (2.0 ** fmt.max_shift)
-    sf = jnp.maximum(sf, 1e-20)
-    wn = wf / sf
+    """Encode ``w[..., K, N]`` with per-stack-slice scale factors.
 
-    levels = jnp.asarray(fmt.levels(), F32)
-    mid = (levels[1:] + levels[:-1]) / 2.0
-    idx = jnp.searchsorted(mid, wn, side="right").astype(jnp.int32)
-    if compensate:
-        # Algorithm 1 over contracting-dim rows: group = K for each
-        # (stack..., N) — transpose K to the back per group.
-        g = wn.reshape(-1, k, n).transpose(0, 2, 1).reshape(-1, k)
-        gi = idx.reshape(-1, k, n).transpose(0, 2, 1).reshape(-1, k)
-        gi = compensate_groups(g, gi, np.asarray(fmt.levels()))
-        idx = (
-            gi.reshape(-1, n, k).transpose(0, 2, 1).reshape(*lead, k, n)
-            if lead
-            else gi.reshape(n, k).T
-        ).astype(jnp.int32)
-
-    level_codes = jnp.asarray(fmt.level_codes(), jnp.int32)
-    codes = level_codes[idx].astype(jnp.uint8)
-    if nibble:
-        assert k % 2 == 0, "nibble packing needs even K"
-        codes = (codes[..., 0::2, :] | (codes[..., 1::2, :] << 4)).astype(jnp.uint8)
-    return PackedWeight(
-        codes=codes, sf=sf.astype(F32), fmt_name=fmt.name, nibble=bool(nibble), shape=(k, n)
+    Thin wrapper over the unified conversion engine: per-slice scale
+    granularity, Algorithm 1 over the contracting-dim rows.
+    """
+    pw, _ = pack_weight(
+        w.astype(F32), fmt, compensate=compensate, granularity="per_slice", nibble=nibble
     )
+    return pw
 
 
 def quantize_params_for_serving(
@@ -91,7 +66,7 @@ def quantize_params_for_serving(
             if hasattr(e, "key"):
                 name = str(e.key)
                 break
-        if name in QUANTIZABLE and leaf.ndim >= 2 and leaf.shape[-2] % 2 == 0:
+        if name in QUANTIZABLE and leaf.ndim >= 2:
             return quantize_stacked(leaf, fmt, compensate=compensate)
         return leaf
 

@@ -1,0 +1,239 @@
+"""Parity tests for the unified conversion engine and the packed conv path.
+
+The engine (``repro.core.convert``) is the single implementation of
+SF → TQL → nearest-neighbour → Algorithm 1; everything else is a
+wrapper. These tests pin that:
+
+  * the three public pipelines (``pack_weight``, ``quantize_stacked``,
+    ``convert_tensor``) agree code-for-code on shared inputs,
+  * ``quantized_conv2d`` matches dequantize-then-``lax.conv``,
+  * nibble K-padding (pad codes decode to NONZERO values for FORMAT_A)
+    stays harmless on every consumer,
+  * ALEXNET_MINI runs end-to-end with every conv+fc weight packed and
+    matches the float-dequant reference.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax import lax
+
+from repro.core.convert import convert_tensor, nibble_pack
+from repro.core.elp_bsd import FORMAT_A, FORMAT_C, TABLE2_FORMATS
+from repro.kernels.conv import extract_patches, quantized_conv2d
+from repro.kernels.ops import (
+    PackedWeight,
+    dequantize,
+    dequantize_nd,
+    pack_conv_weight,
+    pack_weight,
+    quantized_matmul,
+)
+from repro.models import cnn
+from repro.runtime.quantized_params import quantize_stacked
+
+
+# ---------------------------------------------------------------------------
+# (a) one engine, three pipelines
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("fmt", [FORMAT_A, FORMAT_C], ids=lambda f: f.name)
+@pytest.mark.parametrize("compensate", [False, True])
+def test_pipelines_agree_2d(fmt, compensate):
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(64, 48)) * 0.1, jnp.float32)
+
+    pw, vals = pack_weight(w, fmt, compensate=compensate)
+    pw_stacked = quantize_stacked(w, fmt, compensate=compensate)
+    ct = convert_tensor(w, fmt, granularity="per_tensor", compensate=compensate)
+
+    # per-slice of a 2-D tensor == per-tensor, so all three must agree
+    np.testing.assert_array_equal(np.asarray(pw.codes), np.asarray(pw_stacked.codes))
+    np.testing.assert_allclose(np.asarray(pw.sf).ravel(), np.asarray(pw_stacked.sf).ravel())
+    codes = ct.codes()
+    if pw.nibble:
+        codes = nibble_pack(codes, axis=-2)
+    np.testing.assert_array_equal(np.asarray(pw.codes), np.asarray(codes))
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(ct.values), rtol=0, atol=0)
+    np.testing.assert_allclose(
+        np.asarray(dequantize(pw)), np.asarray(vals), rtol=0, atol=0
+    )
+
+
+def test_pipelines_agree_stacked():
+    rng = np.random.default_rng(1)
+    w = jnp.asarray(rng.normal(size=(3, 32, 24)) * 0.05, jnp.float32)
+    pw = quantize_stacked(w, FORMAT_A, compensate=True)
+    ct = convert_tensor(w, FORMAT_A, granularity="per_slice", compensate=True)
+    np.testing.assert_array_equal(
+        np.asarray(pw.codes), np.asarray(nibble_pack(ct.codes(), axis=-2))
+    )
+    assert pw.sf.shape == (3, 1, 1)
+    np.testing.assert_allclose(np.asarray(dequantize(pw)), np.asarray(ct.values))
+    # each slice independently converted == the stacked conversion
+    for s in range(3):
+        ct_s = convert_tensor(w[s], FORMAT_A, granularity="per_tensor", compensate=True)
+        np.testing.assert_array_equal(
+            np.asarray(ct.level_idx[s]), np.asarray(ct_s.level_idx)
+        )
+
+
+def test_pipelines_agree_4d_moe_stack():
+    """4-D [L, E, K, N] expert stacks are matmul stacks, NOT convs: the
+    compensation group must stay the contracting dim (regression — the
+    engine's rank-4 default would read them as [H, W, Cin, Cout])."""
+    rng = np.random.default_rng(8)
+    w = jnp.asarray(rng.normal(size=(2, 3, 16, 8)) * 0.05, jnp.float32)
+    pw = quantize_stacked(w, FORMAT_A, compensate=True)
+    assert pw.sf.shape == (2, 3, 1, 1)
+    for l in range(2):
+        for e in range(3):
+            ct = convert_tensor(w[l, e], FORMAT_A, granularity="per_tensor", compensate=True)
+            np.testing.assert_allclose(
+                np.asarray(dequantize(pw)[l, e]), np.asarray(ct.values)
+            )
+
+
+def test_engine_is_jit_and_eval_shape_safe():
+    w = jnp.ones((4, 16, 8), jnp.float32)
+    f = jax.jit(lambda x: convert_tensor(x, FORMAT_A, granularity="per_slice"))
+    out = f(w)
+    assert out.level_idx.shape == w.shape
+    abstract = jax.eval_shape(f, jax.ShapeDtypeStruct(w.shape, w.dtype))
+    assert abstract.sf.shape == (4, 1, 1)
+
+
+def test_per_channel_granularity():
+    rng = np.random.default_rng(2)
+    w = jnp.asarray(rng.normal(size=(32, 16)) * 0.1, jnp.float32)
+    ct = convert_tensor(w, FORMAT_C, granularity="per_channel", compensate=True)
+    assert ct.sf.shape == (1, 16)
+    # column sf == per-tensor sf of that column alone
+    for c in (0, 7, 15):
+        ct_c = convert_tensor(w[:, c : c + 1], FORMAT_C, granularity="per_tensor")
+        np.testing.assert_allclose(float(ct.sf[0, c]), float(ct_c.sf.reshape(())))
+    # pallas path applies per-channel sf outside the kernel
+    pw, vals = pack_weight(w, FORMAT_C, granularity="per_channel")
+    x = jnp.asarray(rng.normal(size=(5, 32)), jnp.float32)
+    got = quantized_matmul(x, pw, impl="pallas", interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(x @ vals), rtol=1e-5, atol=1e-4
+    )
+
+
+def test_group_axes_must_stay_within_scale_cell():
+    w = jnp.ones((8, 8), jnp.float32)
+    with pytest.raises(ValueError, match="scale cells"):
+        convert_tensor(w, FORMAT_A, granularity="per_channel", group_axes=(1,))
+
+
+# ---------------------------------------------------------------------------
+# (b) packed convolution vs lax.conv reference
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("fmt", [FORMAT_A, FORMAT_C], ids=lambda f: f.name)
+@pytest.mark.parametrize(
+    "kh,kw,cin,cout,stride,padding",
+    [(5, 5, 3, 16, 2, "SAME"), (3, 3, 16, 32, 1, "SAME"), (3, 3, 8, 8, 1, "VALID")],
+)
+def test_quantized_conv2d_matches_lax_conv(fmt, kh, kw, cin, cout, stride, padding):
+    rng = np.random.default_rng(3)
+    w = jnp.asarray(rng.normal(size=(kh, kw, cin, cout)) * 0.1, jnp.float32)
+    x = jnp.asarray(rng.normal(size=(2, 16, 16, cin)), jnp.float32)
+    pw, vals = pack_conv_weight(w, fmt, compensate=True)
+    want = lax.conv_general_dilated(
+        x, vals, (stride, stride), padding, dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+    got_xla = quantized_conv2d(x, pw, stride=stride, padding=padding, impl="xla")
+    got_pallas = quantized_conv2d(
+        x, pw, stride=stride, padding=padding, impl="pallas", interpret=True
+    )
+    np.testing.assert_allclose(np.asarray(got_xla), np.asarray(want), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(got_pallas), np.asarray(want), rtol=1e-5, atol=1e-5
+    )
+    # conv-layout decode reproduces the compensated values bit-exactly
+    np.testing.assert_allclose(np.asarray(dequantize_nd(pw)), np.asarray(vals), atol=0)
+
+
+def test_extract_patches_layout_matches_conv():
+    """patches @ w.reshape(K, N) == conv — pins the (kh, kw, cin) order."""
+    rng = np.random.default_rng(4)
+    w = jnp.asarray(rng.normal(size=(3, 3, 5, 7)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(2, 9, 9, 5)), jnp.float32)
+    patches = extract_patches(x, 3, 3, stride=2, padding="SAME")
+    got = patches.reshape(-1, 3 * 3 * 5) @ w.reshape(-1, 7)
+    want = lax.conv_general_dilated(
+        x, w, (2, 2), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    ).reshape(-1, 7)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# (c) nibble K-padding with nonzero-decoding pad codes
+# ---------------------------------------------------------------------------
+def test_nibble_padding_is_harmless():
+    """FORMAT_A's code 0 decodes to +1 (there is no zero level), so the
+    pad row injected for odd K decodes to a NONZERO weight row. Both
+    consumers must neutralize it: dequantize by slicing, the matmuls by
+    zero-padded activations."""
+    from repro.kernels.ref import decode_values
+
+    assert float(decode_values(jnp.zeros((1,), jnp.int32), FORMAT_A)[0]) != 0.0
+
+    rng = np.random.default_rng(5)
+    k_odd, n = 75, 24  # odd K forces one pad row
+    w = jnp.asarray(rng.normal(size=(k_odd, n)) * 0.1, jnp.float32)
+    pw, vals = pack_weight(w, FORMAT_A, compensate=True)
+    assert pw.nibble and pw.codes.shape == ((k_odd + 1) // 2, n)
+
+    np.testing.assert_allclose(np.asarray(dequantize(pw)), np.asarray(vals), atol=0)
+    x = jnp.asarray(rng.normal(size=(9, k_odd)), jnp.float32)
+    want = np.asarray(x @ vals)
+    for impl in ("xla", "pallas"):
+        got = quantized_matmul(x, pw, impl=impl, interpret=True)
+        np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# (d) ALEXNET_MINI end-to-end on packed weights
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("fmt", TABLE2_FORMATS, ids=lambda f: f.name)
+def test_alexnet_mini_packed_forward(fmt):
+    spec = cnn.ALEXNET_MINI
+    params = cnn.init_params(spec, jax.random.PRNGKey(0))
+    packed = cnn.quantize_params(params, fmt, compensate=True)
+    weight_names = [k for k in params if k.endswith("_w")]
+    assert weight_names and all(
+        isinstance(packed[k], PackedWeight) for k in weight_names
+    )
+
+    reference = {
+        k: (dequantize_nd(v) if isinstance(v, PackedWeight) else v)
+        for k, v in packed.items()
+    }
+    x = jnp.asarray(np.random.default_rng(6).normal(size=(4, 32, 32, 3)), jnp.float32)
+    want = cnn.forward(reference, spec, x)
+    got_xla = cnn.forward(packed, spec, x, impl="xla")
+    np.testing.assert_allclose(np.asarray(got_xla), np.asarray(want), rtol=0, atol=1e-4)
+    assert float(jnp.max(jnp.abs(got_xla - want))) <= 1e-4
+
+
+def test_alexnet_mini_packed_forward_pallas_and_act_bits():
+    spec = cnn.ALEXNET_MINI
+    params = cnn.init_params(spec, jax.random.PRNGKey(1))
+    packed = cnn.quantize_params(params, FORMAT_A, compensate=True)
+    reference = {
+        k: (dequantize_nd(v) if isinstance(v, PackedWeight) else v)
+        for k, v in packed.items()
+    }
+    x = jnp.asarray(np.random.default_rng(7).normal(size=(2, 32, 32, 3)), jnp.float32)
+    want = cnn.forward(reference, spec, x)
+    got = cnn.forward(packed, spec, x, impl="pallas", interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=1e-4)
+
+    # jits with activation fake-quant on top of the packed weights
+    f = jax.jit(lambda p, xx: cnn.forward(p, spec, xx, act_bits=8))
+    assert f(packed, x).shape == (2, 10)
+
+    # compression accounting: 4-bit codes ≈ 8x smaller than f32
+    raw = sum(v.size * 4 for k, v in params.items() if k.endswith("_w"))
+    assert cnn.packed_weight_bytes(packed) < raw / 6
