@@ -1,0 +1,81 @@
+"""Dynamic vs static activation quantization on the CNN serve loop.
+
+The dynamic path (the paper's FP implementation, Sec. V step 1) pays a
+per-site ``max|x|`` reduction at every forward; the calibrated path
+(DESIGN.md §6) runs the same uniform quantizers against compile-time
+constant scales. This benchmark measures that difference on the packed
+serve forward (ELP_BSD weights, im2col conv path):
+
+  * wall-clock per batch, dynamic vs static vs no activation quant,
+  * the number of ``reduce_max`` range reductions in each traced graph
+    (the static path must count zero — the acceptance gauge),
+  * the calibration pass itself (one-off convert-time cost).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.calib import calibrate_cnn, count_range_reductions
+from repro.core.elp_bsd import PRESET_FORMATS
+from repro.models import cnn
+
+
+def run(spec=cnn.ALEXNET_MINI, bits: int = 8, fmt: str = "elp_bsd_c6") -> dict:
+    params = common.train_mini_cnn(spec)
+    images = common.calib_images(spec)
+    x = images[0]
+
+    t0 = time.perf_counter()
+    table, folded = calibrate_cnn(params, spec, images, bits=bits)
+    calib_ms = (time.perf_counter() - t0) * 1e3
+
+    qparams = cnn.quantize_params(folded, PRESET_FORMATS[fmt])
+
+    fwd_fp = jax.jit(lambda p, xx: cnn.forward(p, spec, xx))
+    fwd_dyn = jax.jit(lambda p, xx: cnn.forward(p, spec, xx, act_bits=bits))
+    fwd_static = jax.jit(lambda p, xx: cnn.forward(p, spec, xx, calib=table))
+
+    out = {
+        "calib_ms": calib_ms,
+        "us_fp": common.timed(fwd_fp, qparams, x),
+        "us_dynamic": common.timed(fwd_dyn, qparams, x),
+        "us_static": common.timed(fwd_static, qparams, x),
+        "reduce_max_dynamic": count_range_reductions(
+            lambda xx: cnn.forward(qparams, spec, xx, act_bits=bits), x
+        ),
+        "reduce_max_static": count_range_reductions(
+            lambda xx: cnn.forward(qparams, spec, xx, calib=table), x
+        ),
+    }
+    return out
+
+
+def main() -> None:
+    for spec in (cnn.ALEXNET_MINI, cnn.VGG_MINI):
+        r = run(spec)
+        common.emit(
+            f"calib_bench_{spec.name}_dynamic",
+            r["us_dynamic"],
+            f"reduce_max={r['reduce_max_dynamic']}",
+        )
+        common.emit(
+            f"calib_bench_{spec.name}_static",
+            r["us_static"],
+            f"reduce_max={r['reduce_max_static']};speedup_vs_dynamic="
+            f"{r['us_dynamic'] / max(r['us_static'], 1e-9):.3f}x",
+        )
+        common.emit(
+            f"calib_bench_{spec.name}_overheads",
+            r["us_fp"],
+            f"calib_pass_ms={r['calib_ms']:.1f};act_quant_cost_static="
+            f"{r['us_static'] - r['us_fp']:+.1f}us;act_quant_cost_dynamic="
+            f"{r['us_dynamic'] - r['us_fp']:+.1f}us",
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -56,29 +56,51 @@ def train_mini_cnn(spec: cnn.CnnSpec, steps: int = 1200, lr: float = 2e-2, seed:
 
 
 def make_eval_fn(spec: cnn.CnnSpec, seed: int = 0, amp: float | None = None):
-    """eval_fn(weights, act_bits) -> accuracy on held-out batches.
+    """eval_fn(weights, act_quant) -> accuracy on held-out batches.
+
+    ``act_quant`` is None (fp activations), an int bit-width (dynamic
+    per-tensor range, the paper's FP implementation) or a
+    ``repro.calib.CalibrationTable`` (static calibrated scales — the
+    reduction-free path). Tables are hashable, so they ride through the
+    jit static argument like the int does.
 
     Same seed as training (the class-templates define the task and must
     match); held-out-ness comes from disjoint batch indices. ``amp``
     below the training amplitude yields a hard-margin eval where
     quantization noise is visible before total collapse.
     """
+    from repro.calib import CalibrationTable
+
     ds = CnnDataset(spec.input_hw, spec.input_ch, N_CLASSES, BATCH, seed=seed)
     if amp is not None:
         ds.amp = amp
     batches = [ds.np_batch(10_000 + i) for i in range(EVAL_BATCHES)]
 
     @functools.partial(jax.jit, static_argnums=(1,))
-    def acc(params, act_bits, x, y):
-        logits = cnn.forward(params, spec, x, act_bits=act_bits)
+    def acc(params, act_quant, x, y):
+        if isinstance(act_quant, CalibrationTable):
+            logits = cnn.forward(params, spec, x, calib=act_quant)
+        else:
+            logits = cnn.forward(params, spec, x, act_bits=act_quant)
         return jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
 
-    def eval_fn(params, act_bits=None):
+    def eval_fn(params, act_quant=None):
         return float(
-            np.mean([acc(params, act_bits, jnp.asarray(x), jnp.asarray(y)) for x, y in batches])
+            np.mean(
+                [acc(params, act_quant, jnp.asarray(x), jnp.asarray(y)) for x, y in batches]
+            )
         )
 
     return eval_fn
+
+
+def calib_images(spec: cnn.CnnSpec, n_batches: int = 8, seed: int = 0, batch: int = BATCH):
+    """Stacked calibration batches ``[n, B, H, W, C]`` from the training
+    distribution (disjoint from both train and eval batch indices)."""
+    ds = CnnDataset(spec.input_hw, spec.input_ch, N_CLASSES, batch, seed=seed)
+    return jnp.stack(
+        [jnp.asarray(ds.np_batch(20_000 + i)[0]) for i in range(n_batches)]
+    )
 
 
 def timed(fn, *args, warmup: int = 1, iters: int = 5) -> float:

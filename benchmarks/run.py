@@ -7,6 +7,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
   caxcnn_*   — Sec. VI-D comparison vs CAxCNN
   kernel_*   — fused decode-matmul microbench (HBM byte ratios)
   lm_ptq_*   — beyond-paper: LM weight PTQ with row-group compensation
+  calib_*    — dynamic vs static (calibrated) activation quantization
 """
 from __future__ import annotations
 
@@ -16,6 +17,7 @@ import traceback
 
 def main() -> None:
     from benchmarks import (
+        calib_bench,
         caxcnn_compare,
         fig15a_error_comp,
         fig15b_accuracy_pdp,
@@ -33,6 +35,7 @@ def main() -> None:
         caxcnn_compare,
         kernel_bench,
         lm_ptq,
+        calib_bench,
     ):
         try:
             mod.main()

@@ -2,19 +2,11 @@
 # Tier-1 verification gate: the full test suite plus the quickstart
 # example as an end-to-end smoke test of the conversion engine and the
 # packed CNN execution path.
-#
-# Three tests fail at the seed (pre-existing sharding-rule bugs,
-# tracked in CHANGES.md) and are deselected so the gate stays green on
-# known state while still catching regressions everywhere else. Remove
-# the deselects when those bugs are fixed.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 echo "== tier-1 tests =="
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q \
-  --deselect tests/test_distributed.py::test_sharded_train_step_matches_single_device \
-  --deselect tests/test_sharding_rules.py::test_cache_spec_head_then_hd_then_seq \
-  --deselect tests/test_sharding_rules.py::test_zero1_extends_over_data
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
 
 echo "== quickstart smoke =="
 PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} python examples/quickstart.py

@@ -1,0 +1,58 @@
+"""Calibration subsystem: static activation quantization from one
+streamed statistics pass (DESIGN.md §6).
+
+The public surface:
+
+  * :class:`~repro.calib.policy.CalibrationTable` — frozen per-site
+    static quantizers; hashable, so it rides through jit as a static
+    argument and its scales embed as compile-time constants.
+  * :func:`~repro.calib.runner.calibrate_cnn` /
+    :func:`~repro.calib.runner.calibrate_lm` — run sample batches
+    through a tapped model once, stream per-layer statistics
+    (range, percentile histogram, adjacent-activation correlation,
+    mean truncation error) and emit the table (+ bias-folded params
+    for CNNs).
+  * :class:`~repro.calib.runner.TapCollector` — the activation-tap
+    contract models implement.
+"""
+from repro.calib.observers import (
+    ObserverState,
+    ObserverSummary,
+    init_observer,
+    summarize,
+    update,
+)
+from repro.calib.policy import (
+    CalibrationTable,
+    SiteCalibration,
+    attach_errors,
+    build_table,
+    fold_cnn_bias,
+)
+from repro.calib.runner import (
+    TapCollector,
+    calibrate_cnn,
+    calibrate_lm,
+    collect_stats,
+    count_range_reductions,
+    per_layer_output_mse,
+)
+
+__all__ = [
+    "CalibrationTable",
+    "ObserverState",
+    "ObserverSummary",
+    "SiteCalibration",
+    "TapCollector",
+    "attach_errors",
+    "build_table",
+    "calibrate_cnn",
+    "calibrate_lm",
+    "collect_stats",
+    "count_range_reductions",
+    "fold_cnn_bias",
+    "init_observer",
+    "per_layer_output_mse",
+    "summarize",
+    "update",
+]

@@ -1,0 +1,203 @@
+"""Streaming per-layer activation statistics (jit-friendly observers).
+
+One :class:`ObserverState` per activation-tap site accumulates, in a
+single pass over calibration batches:
+
+  * running ``max |x|`` and first/second moments (mean / std),
+  * a log-magnitude histogram (1/8-octave bins) for percentile clipping
+    without holding activations — the TensorRT-style calibration trick,
+  * adjacent-activation correlation ``rho`` (Pearson, over neighbouring
+    positions along the spatial/sequence axis) — the paper's Sec. IV
+    observation that neighbouring activations are strongly correlated,
+    which is what licenses compensating the *mean* quantization error,
+  * optionally (second pass, once scales are chosen) the per-channel
+    mean quantization error ``E[Q(x) - x]`` that the policy folds into
+    the next layer's bias.
+
+Everything is pure jnp over fixed shapes, so a whole calibration run
+scans inside ONE jit (see :mod:`repro.calib.runner`) and is
+deterministic under tracing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+F32 = jnp.float32
+
+# Histogram of log2|x| at 1/8-octave resolution. Bin b covers
+# |x| in [2^((b-OFFSET)/SCALE), 2^((b+1-OFFSET)/SCALE)): with OFFSET=192
+# that spans ~6e-8 .. ~2.4e2, comfortably covering activation ranges;
+# outliers clamp into the edge bins.
+HIST_BINS = 256
+HIST_SCALE = 8
+HIST_OFFSET = 192
+
+
+class ObserverState(NamedTuple):
+    """Streaming sufficient statistics for one tap site (a pytree).
+
+    Element counters are int32 (f32 counters silently stop incrementing
+    at 2^24 ≈ 16.7M elements — one big LM batch): exact up to 2^31-1
+    elements/pairs per site, which bounds a calibration run at ~2e9
+    activations per site. Value sums stay f32 (relative, not absorbing,
+    error — standard streaming-moment behavior).
+    """
+
+    count: Array  # i32 scalar: elements seen
+    amax: Array  # f32 scalar: running max |x|
+    asum: Array  # f32 scalar: sum x
+    asq: Array  # f32 scalar: sum x^2
+    hist: Array  # [HIST_BINS] i32: |x| magnitude counts
+    pair_n: Array  # i32 scalar: adjacent pairs seen
+    pair_xy: Array  # f32 scalar: sum a*b over adjacent pairs
+    pair_x: Array  # f32 scalar: sum a
+    pair_y: Array  # f32 scalar: sum b
+    pair_x2: Array  # f32 scalar: sum a^2
+    pair_y2: Array  # f32 scalar: sum b^2
+    ch_err: Array  # [C] f32: sum of (Q(x) - x) per trailing channel
+    ch_n: Array  # i32 scalar: elements per channel accumulated
+
+
+def init_observer(channels: int) -> ObserverState:
+    z = jnp.zeros((), F32)
+    zi = jnp.zeros((), jnp.int32)
+    return ObserverState(
+        count=zi,
+        amax=z,
+        asum=z,
+        asq=z,
+        hist=jnp.zeros((HIST_BINS,), jnp.int32),
+        pair_n=zi,
+        pair_xy=z,
+        pair_x=z,
+        pair_y=z,
+        pair_x2=z,
+        pair_y2=z,
+        ch_err=jnp.zeros((channels,), F32),
+        ch_n=zi,
+    )
+
+
+def _adjacent_pairs(x: Array) -> tuple[Array, Array]:
+    """Neighbouring activation values: along the spatial/sequence axis
+    (second-to-last) when there is one, else along the feature axis."""
+    axis = x.ndim - 2 if x.ndim >= 3 else x.ndim - 1
+    n = x.shape[axis]
+    a = jax.lax.slice_in_dim(x, 0, n - 1, axis=axis)
+    b = jax.lax.slice_in_dim(x, 1, n, axis=axis)
+    return a, b
+
+
+def update(
+    state: ObserverState,
+    x: Array,
+    *,
+    quant: tuple[int, float] | None = None,
+) -> ObserverState:
+    """Fold one tapped activation into the streaming statistics.
+
+    ``quant=(bits, amax)`` (static Python values) switches on the
+    second-pass accumulation of the per-channel mean quantization error
+    under that fixed quantizer.
+    """
+    xf = x.astype(F32)
+    ax = jnp.abs(xf)
+    n = int(np.prod(x.shape))
+
+    bins = jnp.clip(
+        jnp.floor(HIST_SCALE * jnp.log2(jnp.maximum(ax, 1e-30))) + HIST_OFFSET,
+        0,
+        HIST_BINS - 1,
+    ).astype(jnp.int32)
+    hist = state.hist.at[bins.reshape(-1)].add(1)
+
+    a, b = _adjacent_pairs(xf)
+    pn = int(np.prod(a.shape))
+
+    ch_err = state.ch_err
+    ch_n = state.ch_n
+    if quant is not None:
+        from repro.core.quantize import fake_quant_uniform
+
+        bits, amax = quant
+        err = fake_quant_uniform(xf, bits, float(amax)) - xf
+        ch_err = ch_err + jnp.sum(err.reshape(-1, x.shape[-1]), axis=0)
+        ch_n = ch_n + n // x.shape[-1]
+
+    return ObserverState(
+        count=state.count + n,
+        amax=jnp.maximum(state.amax, jnp.max(ax)),
+        asum=state.asum + jnp.sum(xf),
+        asq=state.asq + jnp.sum(jnp.square(xf)),
+        hist=hist,
+        pair_n=state.pair_n + pn,
+        pair_xy=state.pair_xy + jnp.sum(a * b),
+        pair_x=state.pair_x + jnp.sum(a),
+        pair_y=state.pair_y + jnp.sum(b),
+        pair_x2=state.pair_x2 + jnp.sum(jnp.square(a)),
+        pair_y2=state.pair_y2 + jnp.sum(jnp.square(b)),
+        ch_err=ch_err,
+        ch_n=ch_n,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class ObserverSummary:
+    """Host-side digest of one site's statistics."""
+
+    count: float
+    amax: float
+    mean: float
+    std: float
+    rho: float  # adjacent-activation Pearson correlation
+    hist: np.ndarray  # magnitude histogram (for percentile clipping)
+    err_mean: np.ndarray | None  # [C] per-channel E[Q(x) - x], pass 2 only
+
+    def percentile_amax(self, pct: float) -> float:
+        """Smallest magnitude covering ``pct`` % of observed values.
+
+        Reads the log-magnitude histogram: returns the upper edge of the
+        first bin at which the cumulative count reaches the target. At
+        ``pct >= 100`` this is the running max itself.
+        """
+        if pct >= 100.0 or self.count == 0:
+            return self.amax
+        cum = np.cumsum(self.hist)
+        target = self.count * pct / 100.0
+        b = int(np.searchsorted(cum, target))
+        if b >= HIST_BINS - 1:
+            return self.amax
+        edge = 2.0 ** ((b + 1 - HIST_OFFSET) / HIST_SCALE)
+        return float(min(edge, self.amax)) if self.amax > 0 else float(edge)
+
+
+def summarize(state: ObserverState) -> ObserverSummary:
+    """Fetch a state to host floats (ends the traced region)."""
+    n = float(state.count)
+    mean = float(state.asum) / max(n, 1.0)
+    var = max(float(state.asq) / max(n, 1.0) - mean * mean, 0.0)
+    pn = float(state.pair_n)
+    cov = float(state.pair_xy) / max(pn, 1.0) - (
+        float(state.pair_x) / max(pn, 1.0)
+    ) * (float(state.pair_y) / max(pn, 1.0))
+    vx = float(state.pair_x2) / max(pn, 1.0) - (float(state.pair_x) / max(pn, 1.0)) ** 2
+    vy = float(state.pair_y2) / max(pn, 1.0) - (float(state.pair_y) / max(pn, 1.0)) ** 2
+    denom = np.sqrt(max(vx, 0.0) * max(vy, 0.0))
+    rho = cov / denom if denom > 1e-12 else 0.0
+    ch_n = float(state.ch_n)
+    err_mean = np.asarray(state.ch_err) / ch_n if ch_n > 0 else None
+    return ObserverSummary(
+        count=n,
+        amax=float(state.amax),
+        mean=mean,
+        std=float(np.sqrt(var)),
+        rho=float(np.clip(rho, -1.0, 1.0)),
+        hist=np.asarray(state.hist),
+        err_mean=err_mean,
+    )

@@ -1,0 +1,236 @@
+"""Scale/bit-width selection and correlation-gated error compensation.
+
+Turns observer summaries into a :class:`CalibrationTable`: static
+per-site quantizers (amax, bits) plus the compensation terms derived
+from measured statistics. The table is a frozen, hashable host-side
+object — inside a jitted forward its scales embed as compile-time
+constants, which is exactly what removes the runtime ``max|x|``
+reductions of the dynamic path.
+
+Compensation (the activation analogue of Algorithm 1): quantizing an
+activation ``x`` to ``Q(x) = x + eps`` shifts the next layer's
+pre-activation by ``W @ E[eps]``; :func:`fold_cnn_bias` subtracts that
+shift from the consumer's bias at convert time, so the correction costs
+nothing at inference. The fold is gated per site on the measured
+adjacent-activation correlation ``rho``: high correlation means the
+quantization error field is locally systematic (low-frequency), so the
+mean-error model survives pooling and the fold helps; for nearly
+independent errors the mean is noise and the site is left alone.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.calib.observers import ObserverSummary
+
+Array = jax.Array
+
+CLIP_MODES = ("max", "percentile")
+
+
+@dataclasses.dataclass(frozen=True)
+class SiteCalibration:
+    """Static quantizer + compensation data for one tap site."""
+
+    amax: float  # clipping range (static scale = amax / qmax)
+    bits: int
+    rho: float  # measured adjacent-activation correlation
+    mean: float
+    std: float
+    err_mean: tuple[float, ...] | None = None  # per-channel E[Q(x) - x]
+    compensate: bool = False  # rho-gate decision for this site
+
+
+@dataclasses.dataclass(frozen=True)
+class CalibrationTable:
+    """Per-site static activation quantizers (hashable: jit-static).
+
+    ``sites`` is a name-keyed tuple of (name, SiteCalibration); the
+    order follows jax's pytree dict sorting (alphabetical), so
+    consumers address sites by *name* (:meth:`site` / :meth:`lookup`),
+    never positionally. The table is immutable; :meth:`with_bits`
+    derives the bit-width variants the critical-bit-width search
+    sweeps.
+    """
+
+    sites: tuple[tuple[str, SiteCalibration], ...]
+    clip: str = "max"
+    pct: float = 100.0
+    rho_threshold: float = 0.25
+
+    def names(self) -> tuple[str, ...]:
+        return tuple(n for n, _ in self.sites)
+
+    def site(self, name: str) -> SiteCalibration:
+        for n, s in self.sites:
+            if n == name:
+                return s
+        raise KeyError(f"no calibration for site {name!r}; have {self.names()}")
+
+    def lookup(self, name: str, default: str | None = None) -> SiteCalibration | None:
+        names = self.names()
+        if name in names:
+            return self.site(name)
+        if default is not None and default in names:
+            return self.site(default)
+        return None
+
+    def with_bits(self, bits: int) -> "CalibrationTable":
+        """Same scales, different bit-width (for the CBW_A search)."""
+        return dataclasses.replace(
+            self,
+            sites=tuple(
+                (n, dataclasses.replace(s, bits=bits)) for n, s in self.sites
+            ),
+        )
+
+    # -- persistence (json: the table is small host data) ------------------
+    def save(self, path: str) -> None:
+        payload = {
+            "clip": self.clip,
+            "pct": self.pct,
+            "rho_threshold": self.rho_threshold,
+            "sites": [
+                {
+                    "name": n,
+                    **{
+                        k: (list(v) if isinstance(v, tuple) else v)
+                        for k, v in dataclasses.asdict(s).items()
+                    },
+                }
+                for n, s in self.sites
+            ],
+        }
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=1)
+
+    @classmethod
+    def load(cls, path: str) -> "CalibrationTable":
+        with open(path) as f:
+            payload = json.load(f)
+        sites = []
+        for rec in payload["sites"]:
+            name = rec.pop("name")
+            if rec.get("err_mean") is not None:
+                rec["err_mean"] = tuple(rec["err_mean"])
+            sites.append((name, SiteCalibration(**rec)))
+        return cls(
+            sites=tuple(sites),
+            clip=payload["clip"],
+            pct=payload["pct"],
+            rho_threshold=payload["rho_threshold"],
+        )
+
+
+def build_table(
+    summaries: Mapping[str, ObserverSummary],
+    *,
+    bits: int = 8,
+    clip: str = "percentile",
+    pct: float = 99.9,
+    rho_threshold: float = 0.25,
+) -> CalibrationTable:
+    """Pick each site's static clipping range from its statistics.
+
+    ``clip="max"`` uses the observed maximum (no clipping error, widest
+    step); ``clip="percentile"`` trades outlier truncation for a finer
+    step over the bulk of the distribution — the standard post-training
+    calibration trade (Goyal & Vanschoren, arXiv:2102.02147).
+    """
+    if clip not in CLIP_MODES:
+        raise ValueError(f"clip must be one of {CLIP_MODES}, got {clip!r}")
+    sites = []
+    for name, s in summaries.items():
+        amax = s.amax if clip == "max" else s.percentile_amax(pct)
+        sites.append(
+            (
+                name,
+                SiteCalibration(
+                    amax=float(max(amax, 1e-12)),
+                    bits=int(bits),
+                    rho=s.rho,
+                    mean=s.mean,
+                    std=s.std,
+                    compensate=abs(s.rho) >= rho_threshold,
+                ),
+            )
+        )
+    return CalibrationTable(
+        sites=tuple(sites), clip=clip, pct=pct, rho_threshold=rho_threshold
+    )
+
+
+def attach_errors(
+    table: CalibrationTable, summaries: Mapping[str, ObserverSummary]
+) -> CalibrationTable:
+    """Record second-pass per-channel mean errors into the table."""
+    sites = []
+    for name, s in table.sites:
+        em = summaries[name].err_mean if name in summaries else None
+        sites.append(
+            (
+                name,
+                dataclasses.replace(
+                    s, err_mean=tuple(float(e) for e in em) if em is not None else None
+                ),
+            )
+        )
+    return dataclasses.replace(table, sites=tuple(sites))
+
+
+def fold_cnn_bias(params: dict, spec, table: CalibrationTable) -> dict:
+    """Fold ``W @ E[eps]`` of each quantized input site into the consumer
+    bias (convert-time; zero runtime cost).
+
+    Walks the spec exactly like ``cnn.forward`` walks it, tracking which
+    tap site feeds each conv/fc layer. Sites whose ``compensate`` gate
+    is off (low rho) or which carry no measured ``err_mean`` are left
+    untouched.
+    """
+    from repro.models.cnn import Conv, Fc, Pool
+
+    out = dict(params)
+    site = "input"
+    site_ch = spec.input_ch
+    idx = 0
+    flat_ch: int | None = None  # channels at flatten time (first Fc)
+    for l in spec.layers:
+        if isinstance(l, Pool):
+            continue  # pooling preserves channel count (and, for
+            # correlated error fields, the error mean — the rho gate)
+        sc = table.lookup(site)
+        if isinstance(l, Conv):
+            if sc is not None and sc.compensate and sc.err_mean is not None:
+                w = params[f"conv{idx}_w"]  # [kh, kw, cin, cout]
+                err = jnp.asarray(sc.err_mean, w.dtype)
+                delta = jnp.einsum("hwio,i->o", w.astype(jnp.float32), err)
+                out[f"conv{idx}_b"] = params[f"conv{idx}_b"] - delta.astype(
+                    params[f"conv{idx}_b"].dtype
+                )
+            site, site_ch = f"conv{idx}", l.ch
+            idx += 1
+        elif isinstance(l, Fc):
+            if sc is not None and sc.compensate and sc.err_mean is not None:
+                w = params[f"fc{idx}_w"]  # [fan_in, out]
+                err = jnp.asarray(sc.err_mean, jnp.float32)
+                if flat_ch is None:
+                    # first fc eats the flattened [h, w, c] map (c fastest):
+                    # the per-channel error tiles over the spatial positions.
+                    wr = w.astype(jnp.float32).reshape(-1, site_ch, w.shape[-1])
+                    delta = jnp.einsum("pio,i->o", wr, err)
+                else:
+                    delta = jnp.einsum("io,i->o", w.astype(jnp.float32), err)
+                out[f"fc{idx}_b"] = params[f"fc{idx}_b"] - delta.astype(
+                    params[f"fc{idx}_b"].dtype
+                )
+            if flat_ch is None:
+                flat_ch = site_ch
+            site, site_ch = f"fc{idx}", l.out
+            idx += 1
+    return out

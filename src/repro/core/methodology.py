@@ -18,7 +18,7 @@ replacements plus the encoded form for storage accounting.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Mapping, Sequence
+from typing import Any, Callable, Mapping, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -29,8 +29,12 @@ from repro.core.elp_bsd import ElpBsdFormat
 from repro.core.quantize import QuantizedTensor, quantize_tensor
 
 Array = jax.Array
-EvalFn = Callable[[Mapping[str, Array], int | None], float]
-# eval_fn(weights, act_bits) -> accuracy in [0, 1]; act_bits None = fp.
+EvalFn = Callable[[Mapping[str, Array], Any], float]
+# eval_fn(weights, act_quant) -> accuracy in [0, 1]. ``act_quant`` is
+# None (fp activations), an int (dynamic-range uniform quantization at
+# that bit-width — the paper's FP implementation), or a
+# ``repro.calib.CalibrationTable`` (static per-layer scales; see
+# DESIGN.md §6). ``benchmarks.common.make_eval_fn`` accepts all three.
 
 
 @dataclasses.dataclass
@@ -59,11 +63,18 @@ def find_critical_act_bits(
     ac: float,
     bw_max: int = 8,
     bw_min: int = 2,
+    calib=None,
 ) -> int:
-    """Sec. V step 1: lowest activation bit-width within the loss budget."""
+    """Sec. V step 1: lowest activation bit-width within the loss budget.
+
+    With ``calib`` (a CalibrationTable) the search sweeps the *static*
+    calibrated quantizers — ``eval_fn`` receives ``calib.with_bits(b)``
+    instead of a raw bit-width, so the evaluated path is the same
+    reduction-free graph that serves.
+    """
     cbw = bw_max
     for bits in range(bw_max, bw_min - 1, -1):
-        acc = eval_fn(weights, bits)
+        acc = eval_fn(weights, calib.with_bits(bits) if calib is not None else bits)
         if baseline_acc - acc > ac:
             break
         cbw = bits
@@ -103,17 +114,30 @@ def convert(
     bw_max: int = 8,
     bw_min: int = 4,
     compensate: bool = True,
+    calib=None,
 ) -> ConversionResult:
-    """The full Sec. V methodology loop."""
+    """The full Sec. V methodology loop.
+
+    ``calib`` switches step 1 (and the step-5 walk-back) to the
+    calibrated static activation-quantization path: every evaluation
+    runs the table at the candidate bit-width, so the chosen ``CBW_A``
+    is valid for the reduction-free serving graph.
+    """
+
+    def act_quant(bits: int):
+        return calib.with_bits(bits) if calib is not None else bits
+
     baseline_acc = eval_fn(weights, None)
-    cbw = find_critical_act_bits(eval_fn, weights, baseline_acc, ac, bw_max, bw_min)
+    cbw = find_critical_act_bits(
+        eval_fn, weights, baseline_acc, ac, bw_max, bw_min, calib=calib
+    )
 
     qw, qt = quantize_model(weights, group_axes, fmt, compensate=compensate)
-    acc = eval_fn(qw, cbw)
+    acc = eval_fn(qw, act_quant(cbw))
     # Step 5: walk activation precision back up while constraint violated.
     while baseline_acc - acc > ac and cbw < bw_max:
         cbw += 1
-        acc = eval_fn(qw, cbw)
+        acc = eval_fn(qw, act_quant(cbw))
 
     raw = sum(int(np.prod(w.shape)) * w.dtype.itemsize for w in weights.values())
     enc = sum(q.nbytes_encoded for q in qt.values())

@@ -91,10 +91,24 @@ def second_neighbor_idx(w: Array, levels: np.ndarray, nn_idx: Array) -> Array:
 # ---------------------------------------------------------------------------
 # Uniform fixed-point quantization (activations, and the paper's FP baseline)
 # ---------------------------------------------------------------------------
+def _check_uniform_bits(bits: int) -> None:
+    """Symmetric uniform quantization needs ``bits >= 2``: at 1 bit the
+    signed range collapses to ``qmax = 2^0 - 1 = 0`` — a single all-zero
+    level and a divide-by-zero step."""
+    if not isinstance(bits, (int, np.integer)) or isinstance(bits, bool):
+        raise TypeError(f"bits must be a static int, got {type(bits).__name__}")
+    if bits < 2:
+        raise ValueError(
+            f"symmetric uniform quantization requires bits >= 2, got {bits} "
+            "(bits=1 has zero quantization levels)"
+        )
+
+
 def uniform_levels(bits: int, max_abs: float) -> np.ndarray:
     """Symmetric uniform (fixed-point) level table with 2^bits - 1 levels."""
+    _check_uniform_bits(bits)
     qmax = 2 ** (bits - 1) - 1
-    step = max_abs / qmax if qmax else max_abs
+    step = max_abs / qmax
     return np.arange(-qmax, qmax + 1, dtype=np.float64) * step
 
 
@@ -105,6 +119,7 @@ def fake_quant_uniform(x: Array, bits: int, max_abs: float | Array) -> Array:
     for activation quantization at the searched critical bit-width
     ``CBW_A`` (Sec. V step 1).
     """
+    _check_uniform_bits(bits)
     qmax = float(2 ** (bits - 1) - 1)
     scale = jnp.maximum(jnp.asarray(max_abs, dtype=jnp.float32), 1e-12) / qmax
     q = jnp.clip(jnp.round(x / scale), -qmax, qmax)

@@ -61,6 +61,13 @@ class PackedWeight:
       source_shape: original nd layout for non-matmul weights (set to
         ``(kh, kw, cin, cout)`` by :func:`pack_conv_weight`; None for
         plain matmuls).
+      act_scale / act_bits: optional *static* activation quantizer for
+        this weight's input (calibrated serve path, DESIGN.md §6): when
+        set, ``quantized_matmul`` fake-quantizes ``x`` against the
+        compile-time constant ``act_scale`` — no runtime ``max|x|``
+        reduction in the decode graph. Set by
+        ``runtime.quantized_params.quantize_params_for_serving`` from a
+        :class:`~repro.calib.policy.CalibrationTable`.
     """
 
     codes: Array
@@ -69,6 +76,8 @@ class PackedWeight:
     nibble: bool
     shape: tuple[int, int]
     source_shape: tuple[int, ...] | None = None
+    act_scale: float | None = None
+    act_bits: int | None = None
 
     @property
     def fmt(self) -> ElpBsdFormat:
@@ -85,6 +94,8 @@ class PackedWeight:
             self.nibble,
             self.shape,
             self.source_shape,
+            self.act_scale,
+            self.act_bits,
         )
 
     def tree_flatten(self):
@@ -93,6 +104,8 @@ class PackedWeight:
             self.nibble,
             self.shape,
             self.source_shape,
+            self.act_scale,
+            self.act_bits,
         )
 
     @classmethod
@@ -228,7 +241,17 @@ def quantized_matmul(
     out_dtype=None,
     interpret: bool | None = None,
 ) -> Array:
-    """``x[..., K] @ dequant(pw)[K, N]`` with fused in-VMEM decode."""
+    """``x[..., K] @ dequant(pw)[K, N]`` with fused in-VMEM decode.
+
+    When the weight carries a calibrated static activation quantizer
+    (``act_scale``/``act_bits`` aux data), the input is fake-quantized
+    against that compile-time constant first — the serve path's
+    zero-reduction activation quantization.
+    """
+    if pw.act_scale is not None:
+        from repro.core.quantize import fake_quant_uniform
+
+        x = fake_quant_uniform(x, pw.act_bits or 8, pw.act_scale)
     k, n = pw.shape
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])

@@ -146,14 +146,27 @@ def forward(
     x: Array,
     act_bits: int | None = None,
     *,
+    calib=None,
+    tap=None,
     impl: str = "xla",
     interpret: bool | None = None,
 ) -> Array:
     """x: [B, H, W, C] images → logits [B, n_classes].
 
-    ``act_bits`` simulates uniform fixed-point activation quantization
-    (Sec. V step 1: the critical-bit-width search, dynamic per-tensor
-    range as in the paper's FP implementation).
+    Activation quantization, by site (``"input"``, then ``"conv{i}"`` /
+    ``"fc{i}"`` after each hidden relu):
+
+      * ``act_bits`` alone — uniform fixed-point with a *dynamic*
+        per-tensor range (Sec. V step 1 as the paper's FP baseline runs
+        it; one ``max|x|`` reduction per site at run time);
+      * ``calib`` (a :class:`~repro.calib.policy.CalibrationTable`) —
+        *static* per-site scales measured offline: the scales embed as
+        compile-time constants, so the traced graph contains no range
+        reductions at all (DESIGN.md §6). ``act_bits`` then overrides
+        the table's bit-width (the CBW_A search sweeps it).
+
+    ``tap`` is the activation-tap hook (calibration contract): called as
+    ``x = tap(site, x)`` on the pre-quantization value at every site.
 
     Weights may be float arrays OR :class:`~repro.kernels.ops.PackedWeight`
     leaves (see :func:`quantize_params`): packed convs run through
@@ -162,17 +175,22 @@ def forward(
     ELP_BSD codes end-to-end. ``impl`` selects the packed execution path
     ("xla" dequant-fused fallback, "pallas" fused decode+matmul kernel).
     """
-    from repro.core.quantize import fake_quant_dynamic
+    from repro.core.quantize import fake_quant_dynamic, fake_quant_uniform
     from repro.kernels.conv import quantized_conv2d
     from repro.kernels.ops import PackedWeight, quantized_matmul
 
-    def q(t):
+    def q(t, site):
+        if tap is not None:
+            t = tap(site, t)
+        if calib is not None:
+            sc = calib.site(site)
+            return fake_quant_uniform(t, act_bits or sc.bits, sc.amax)
         return fake_quant_dynamic(t, act_bits) if act_bits else t
 
     idx = 0
     flat = False
     n_layers = sum(isinstance(l, (Conv, Fc)) for l in spec.layers)
-    x = q(x)
+    x = q(x, "input")
     for l in spec.layers:
         if isinstance(l, Conv):
             w = params[f"conv{idx}_w"]
@@ -195,7 +213,7 @@ def forward(
                     dimension_numbers=("NHWC", "HWIO", "NHWC"),
                 )
             x = x + params[f"conv{idx}_b"].astype(F32)
-            x = q(jax.nn.relu(x))
+            x = q(jax.nn.relu(x), f"conv{idx}")
             idx += 1
         elif isinstance(l, Pool):
             x = jax.lax.reduce_window(
@@ -215,7 +233,7 @@ def forward(
             x = x + params[f"fc{idx}_b"].astype(F32)
             idx += 1
             if idx < n_layers:
-                x = q(jax.nn.relu(x))
+                x = q(jax.nn.relu(x), f"fc{idx - 1}")
     return x
 
 

@@ -13,6 +13,7 @@ Pure functions over parameter dicts. Conventions:
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Any
 
@@ -59,15 +60,40 @@ def rope_embed(positions: Array, head_dim: int, theta: float = 1e4) -> tuple[Arr
     return jnp.cos(ang), jnp.sin(ang)
 
 
+@functools.lru_cache(maxsize=None)
+def _rot_half_matrix(d: int) -> np.ndarray:
+    """Constant ``R`` with ``x @ R == concat([-x2, x1])`` (rotate-half).
+
+    RoPE is applied as a contraction instead of slice+concatenate on the
+    head_dim axis: the SPMD partitioner miscompiles concatenations of
+    slices of a sharded dim (observed on the CPU backend when kv*hd
+    shards split inside a head), while dot contractions reshard exactly.
+    """
+    d2 = d // 2
+    r = np.zeros((d, d), np.float32)
+    r[np.arange(d2) + d2, np.arange(d2)] = -1.0
+    r[np.arange(d2), np.arange(d2) + d2] = 1.0
+    return r
+
+
+def _tile2(t: Array) -> Array:
+    """``concat([t, t], -1)`` via broadcast+reshape: a concatenate built
+    inside a scan body miscompiles under the SPMD partitioner when its
+    product is multiplied with a sharded operand (same bug family as the
+    rotate-half concat — see :func:`_rot_half_matrix`)."""
+    d = t.shape[-1]
+    return jnp.broadcast_to(t[..., None, :], t.shape[:-1] + (2, d)).reshape(
+        t.shape[:-1] + (2 * d,)
+    )
+
+
 def apply_rope(x: Array, cos: Array, sin: Array) -> Array:
     """Rotate ``x[B, S, H, hd]`` with tables ``[B?, S, hd/2]``."""
-    d2 = x.shape[-1] // 2
-    x1, x2 = x[..., :d2], x[..., d2:]
     while cos.ndim < x.ndim:  # broadcast over head dim
         cos, sin = cos[..., None, :], sin[..., None, :]
-    xf1, xf2 = x1.astype(F32), x2.astype(F32)
-    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
-    return out.astype(x.dtype)
+    xf = x.astype(F32)
+    rot = jnp.dot(xf, jnp.asarray(_rot_half_matrix(x.shape[-1])))
+    return (xf * _tile2(cos) + rot * _tile2(sin)).astype(x.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -171,8 +197,12 @@ def attention_chunked(
 # ---------------------------------------------------------------------------
 # MLPs
 # ---------------------------------------------------------------------------
-def mlp_apply(p: dict[str, Array], x: Array, kind: str) -> Array:
-    """``kind``: 'swiglu'/'geglu' (w1,w3,w2) or 'gelu' (w1,w2)."""
+def mlp_apply(p: dict[str, Array], x: Array, kind: str, acts: dict | None = None) -> Array:
+    """``kind``: 'swiglu'/'geglu' (w1,w3,w2) or 'gelu' (w1,w2).
+
+    ``acts`` (calibration collection, DESIGN.md §6) records the hidden
+    activation entering ``w2`` under ``"ffn_hidden"``.
+    """
     if kind == "swiglu":
         h = jax.nn.silu(matmul(x, p["w1"])) * matmul(x, p["w3"])
     elif kind == "geglu":
@@ -181,6 +211,8 @@ def mlp_apply(p: dict[str, Array], x: Array, kind: str) -> Array:
         h = jax.nn.gelu(matmul(x, p["w1"]))
     else:
         raise ValueError(kind)
+    if acts is not None:
+        acts["ffn_hidden"] = h
     return matmul(h, p["w2"])
 
 

@@ -133,11 +133,14 @@ def _attention(
     prefix: str = "w",
     kv_override: Array | None = None,
     pctx: ParallelCtx | None = None,
+    acts: dict | None = None,
 ) -> tuple[Array, tuple[Array, Array] | None]:
     """GQA attention, optionally reading/updating a KV cache.
 
     ``kv_override`` supplies encoder output for cross-attention.
-    Returns (output, updated (k, v) cache or None).
+    Returns (output, updated (k, v) cache or None). ``acts``
+    (calibration collection) records the attention mix entering the
+    output projection under ``"attn_mix"``.
     """
     b, s, d = x.shape
     h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
@@ -198,7 +201,10 @@ def _attention(
         out = attention_chunked(q, kf, vf, causal=causal, window=window, chunk=ATTN_CHUNK)
     else:
         out = attention_dot(q, kf, vf, causal=causal, window=window, q_offset=q_offset)
-    return matmul(out.reshape(b, s, h * hd), lp[prefix + "o"]), new_cache
+    mix = out.reshape(b, s, h * hd)
+    if acts is not None:
+        acts["attn_mix"] = mix
+    return matmul(mix, lp[prefix + "o"]), new_cache
 
 
 def block_apply(
@@ -213,8 +219,15 @@ def block_apply(
     cache_pos: Array | None = None,
     enc_out: Array | None = None,
     pctx: ParallelCtx | None = None,
+    acts: dict | None = None,
 ) -> tuple[Array, tuple[Array, Array] | None]:
-    """Pre-norm transformer block: attn + (cross-attn) + FFN/MoE."""
+    """Pre-norm transformer block: attn + (cross-attn) + FFN/MoE.
+
+    ``acts`` (calibration collection, DESIGN.md §6) records the inputs
+    of this block's matmuls: ``"attn_in"`` (post-ln1, feeds wq/wk/wv),
+    ``"attn_mix"`` (feeds wo), ``"ffn_in"`` (post-ln2, feeds w1/w3) and
+    ``"ffn_hidden"`` (feeds w2; dense FFN only).
+    """
     if pctx is not None and pctx.seq_parallel and x.shape[1] > 1:
         # §Perf: Megatron-style sequence parallelism — the residual
         # stream (and hence the remat stash the backward scan saves) is
@@ -226,6 +239,8 @@ def block_apply(
             x, _P(pctx.batch_axes, pctx.model_axis, None)
         )
     attn_in = rms_norm(x, lp["ln1"])
+    if acts is not None:
+        acts["attn_in"] = attn_in
     attn_out, new_cache = _attention(
         lp,
         cfg,
@@ -236,6 +251,7 @@ def block_apply(
         kv_cache=kv_cache,
         cache_pos=cache_pos,
         pctx=pctx,
+        acts=acts,
     )
     x = x + attn_out
     if pctx is not None and pctx.seq_parallel and x.shape[1] > 1:
@@ -253,6 +269,8 @@ def block_apply(
         )
         x = x + xa_out
     ffn_in = rms_norm(x, lp["ln2"])
+    if acts is not None:
+        acts["ffn_in"] = ffn_in
     if cfg.is_moe:
         b, s, d = ffn_in.shape
         y = moe_lib.moe_apply(
@@ -262,7 +280,7 @@ def block_apply(
             pctx,
         ).reshape(b, s, d)
     else:
-        y = mlp_apply(lp, ffn_in, cfg.mlp_kind)
+        y = mlp_apply(lp, ffn_in, cfg.mlp_kind, acts=acts)
     return x + y, new_cache
 
 
@@ -282,8 +300,18 @@ def stack_apply(
     enc_out: Array | None = None,
     pctx: ParallelCtx | None = None,
     remat: bool = False,
+    collect: bool = False,
 ) -> tuple[Array, dict[str, Array] | None]:
-    """Run the block stack via ``lax.scan`` over the stacked layer axis."""
+    """Run the block stack via ``lax.scan`` over the stacked layer axis.
+
+    ``collect=True`` (cache-less forward only) returns, in the second
+    slot, a dict of stacked per-layer activations: ``"block_out"``
+    (``[L, B, S, D]`` residual stream) plus the per-matmul inputs
+    ``block_apply`` records (``attn_in``/``attn_mix``/``ffn_in``/
+    ``ffn_hidden``) — the calibration runner's view (DESIGN.md §6).
+    """
+    if collect and cache is not None:
+        raise ValueError("collect=True is for the cache-less training forward")
     b, s, d = x.shape
     if positions is None:
         positions = jnp.arange(s)[None, :]
@@ -317,10 +345,12 @@ def stack_apply(
             )
             return out, new_kv
         lp = xs
+        acts: dict | None = {} if collect else None
         out, _ = block_apply(
-            lp, cfg, xc, rope=rope, causal=causal, window=window, enc_out=enc_out, pctx=pctx
+            lp, cfg, xc, rope=rope, causal=causal, window=window, enc_out=enc_out,
+            pctx=pctx, acts=acts,
         )
-        return out, None
+        return out, ({"block_out": out, **acts} if collect else None)
 
     fn = jax.checkpoint(body) if remat else body
     if cache is not None:
@@ -331,8 +361,8 @@ def stack_apply(
         xs = (blocks, cache["k"], cache["v"])
         x, kv_out = jax.lax.scan(fn, x, xs)
         return x, {"k": kv_out[0], "v": kv_out[1]}
-    x, _ = jax.lax.scan(fn, x, blocks)
-    return x, None
+    x, ys = jax.lax.scan(fn, x, blocks)
+    return x, (ys if collect else None)
 
 
 # ---------------------------------------------------------------------------
@@ -360,12 +390,35 @@ def forward(
     frontend: Array | None = None,
     pctx: ParallelCtx | None = None,
     remat: bool = False,
+    tap=None,
 ) -> Array:
-    """Training forward: logits ``[B, S(+F), V]`` (float32)."""
+    """Training forward: logits ``[B, S(+F), V]`` (float32).
+
+    ``tap`` is the activation-tap hook (calibration contract): sites are
+    ``"embed"`` (post-embedding), ``"blocks"`` (stacked per-layer block
+    outputs ``[L, B, S, D]``), the stacked per-matmul inputs
+    (``"attn_in"``/``"attn_mix"``/``"ffn_in"``/``"ffn_hidden"`` — what
+    the calibrated serve path quantizes against, DESIGN.md §6) and
+    ``"final"`` (pre-unembed).
+    """
     x = embed_tokens(params, cfg, tokens, frontend)
-    x, _ = stack_apply(
-        params["blocks"], cfg, x, causal=True, window=cfg.window, pctx=pctx, remat=remat
+    if tap is not None:
+        x = tap("embed", x)
+    x, ys = stack_apply(
+        params["blocks"],
+        cfg,
+        x,
+        causal=True,
+        window=cfg.window,
+        pctx=pctx,
+        remat=remat,
+        collect=tap is not None,
     )
+    if tap is not None:
+        tap("blocks", ys.pop("block_out"))
+        for site, act in ys.items():
+            tap(site, act)
+        x = tap("final", x)
     return unembed(params, cfg, x)
 
 

@@ -38,6 +38,20 @@ QUANTIZABLE = {
 
 FMT_BY_TAG = {"elp4": "elp_bsd_a4", "elp8": "elp_bsd_c6"}
 
+# Which calibration tap site measures each matmul leaf's *input*
+# (transformer.forward's collection sites, DESIGN.md §6). Leaves with
+# no measured site (cross-attention xq/xk/xv/xo — their inputs are the
+# encoder output / post-ln_x stream, which the decoder-LM calibration
+# pass never sees — plus rg-lru / mamba projections and routers) are
+# served without static activation quantization rather than with a
+# wrong-distribution scale.
+ACT_SITE_BY_LEAF = {
+    "wq": "attn_in", "wk": "attn_in", "wv": "attn_in",
+    "wo": "attn_mix",
+    "w1": "ffn_in", "w3": "ffn_in", "we1": "ffn_in", "we3": "ffn_in",
+    "w2": "ffn_hidden", "we2": "ffn_hidden",
+}
+
 
 def quantize_stacked(
     w: Array, fmt: ElpBsdFormat, *, compensate: bool = True, nibble: bool | None = None
@@ -54,9 +68,28 @@ def quantize_stacked(
 
 
 def quantize_params_for_serving(
-    params: Any, cfg: ArchConfig, fmt: ElpBsdFormat | str, *, compensate: bool = True
+    params: Any,
+    cfg: ArchConfig,
+    fmt: ElpBsdFormat | str,
+    *,
+    compensate: bool = True,
+    calib=None,
 ) -> Any:
-    """Replace every quantizable matmul leaf with a PackedWeight."""
+    """Replace every quantizable matmul leaf with a PackedWeight.
+
+    ``calib`` (a :class:`~repro.calib.policy.CalibrationTable`, e.g.
+    from ``calib.calibrate_lm``) additionally stamps each packed weight
+    with a *static* activation quantizer for its input: the leaf's own
+    site when the table carries one, else the site that measures that
+    matmul's input distribution (:data:`ACT_SITE_BY_LEAF` — post-norm
+    ``attn_in``/``ffn_in``, the ``attn_mix`` output mix, the
+    ``ffn_hidden`` intermediate). ``quantized_matmul`` then quantizes
+    activations against compile-time constants — the decode hot path
+    runs zero range reductions (DESIGN.md §6). Leaves without a
+    measured site are packed without activation quantization.
+    """
+    import dataclasses
+
     if isinstance(fmt, str):
         fmt = PRESET_FORMATS[FMT_BY_TAG.get(fmt, fmt)]
 
@@ -67,7 +100,14 @@ def quantize_params_for_serving(
                 name = str(e.key)
                 break
         if name in QUANTIZABLE and leaf.ndim >= 2:
-            return quantize_stacked(leaf, fmt, compensate=compensate)
+            pw = quantize_stacked(leaf, fmt, compensate=compensate)
+            if calib is not None:
+                sc = calib.lookup(name, default=ACT_SITE_BY_LEAF.get(name))
+                if sc is not None:
+                    pw = dataclasses.replace(
+                        pw, act_scale=sc.amax, act_bits=sc.bits
+                    )
+            return pw
         return leaf
 
     return jax.tree_util.tree_map_with_path(visit, params)

@@ -116,6 +116,15 @@ def batch_axes(mesh: Mesh) -> tuple[str, ...]:
     return tuple(a for a in ("pod", "data") if a in mesh.shape)
 
 
+def _axis_entry(axes: tuple[str, ...]) -> str | tuple[str, ...]:
+    """PartitionSpec entry for a set of axes: bare name when singleton.
+
+    ``P("data")`` and ``P(("data",))`` shard identically but compare
+    unequal, so downstream spec comparisons want the canonical form.
+    """
+    return axes[0] if len(axes) == 1 else axes
+
+
 def input_spec(shape: tuple[int, ...], mesh: Mesh) -> P:
     """Batch-shard inputs over the data axes when the batch divides."""
     ba = batch_axes(mesh)
@@ -155,9 +164,9 @@ def cache_spec(
         # batch dim is dim 1 for stacked caches, dim 0 for unstacked
         bdim = 1 if len(shape) >= 3 else 0
         if shape[bdim] % nb == 0:
-            spec[bdim] = ba
+            spec[bdim] = _axis_entry(ba)
         elif "data" in mesh.shape and shape[bdim] % mesh.shape["data"] == 0:
-            spec[bdim] = ("data",)
+            spec[bdim] = "data"
     if prefer_seq and len(shape) >= 4:
         sdim = len(shape) - 3  # seq dim of [.., B, S, KV, hd]
         if shape[sdim] % msize == 0:
@@ -190,7 +199,7 @@ def zero1_spec(spec: P, shape: tuple[int, ...], mesh: Mesh) -> P:
     if not cands:
         return P(*entries)
     d = max(cands, key=lambda i: shape[i])
-    entries[d] = ba
+    entries[d] = _axis_entry(ba)
     return P(*entries)
 
 
