@@ -1,51 +1,78 @@
-"""Benchmark driver — one module per paper table/figure.
+"""Figure/table benchmark driver — a name → module registry.
 
-Prints ``name,us_per_call,derived`` CSV rows:
-  fig15a_*   — Fig. 15(a) error-compensation effectiveness
-  fig15b_*   — Fig. 15(b) accuracy vs PDP for Table II ELP_BSD formats
-  table2_*   — Table II MAC characteristics + network energy model
-  caxcnn_*   — Sec. VI-D comparison vs CAxCNN
-  kernel_*   — fused decode-matmul microbench (HBM byte ratios)
-  lm_ptq_*   — beyond-paper: LM weight PTQ with row-group compensation
-  calib_*    — dynamic vs static (calibrated) activation quantization
+Each entry reproduces one paper table/figure (or a beyond-paper study)
+and prints ``name,us_per_call,derived`` CSV rows. Run them by name::
+
+    python benchmarks/run.py --list          # show registry
+    python benchmarks/run.py fig15a kernel   # run a subset
+    python benchmarks/run.py                 # run everything
+
+These are the *analysis* benchmarks (accuracy/energy/error curves).
+The *performance trajectory* (wall-clock, HLO bytes, regression-gated
+in CI) lives in the ``repro.bench`` subsystem: ``python -m repro.bench``
+and ``scripts/bench.sh``, emitting the committed ``BENCH_*.json``
+baselines — keep ad-hoc output out of ``benchmarks/results/`` (that
+directory holds only the cached trained-model checkpoints).
 """
 from __future__ import annotations
 
+import argparse
 import sys
 import traceback
 
+# name -> (module path, description)
+REGISTRY: dict[str, tuple[str, str]] = {
+    "table2": ("benchmarks.table2_energy", "Table II MAC characteristics + network energy"),
+    "fig15a": ("benchmarks.fig15a_error_comp", "Fig. 15(a) error-compensation effectiveness"),
+    "fig15b": ("benchmarks.fig15b_accuracy_pdp", "Fig. 15(b) accuracy vs PDP per format"),
+    "caxcnn": ("benchmarks.caxcnn_compare", "Sec. VI-D comparison vs CAxCNN"),
+    "kernel": ("benchmarks.kernel_bench", "fused decode-matmul microbench (HBM ratios)"),
+    "lm_ptq": ("benchmarks.lm_ptq", "beyond-paper: LM weight PTQ with row groups"),
+    "calib": ("benchmarks.calib_bench", "dynamic vs static activation quantization"),
+}
 
-def main() -> None:
-    from benchmarks import (
-        calib_bench,
-        caxcnn_compare,
-        fig15a_error_comp,
-        fig15b_accuracy_pdp,
-        kernel_bench,
-        lm_ptq,
-        table2_energy,
+
+def run(names: list[str]) -> list[str]:
+    """Import and run the named entries; returns the names that failed."""
+    import importlib
+
+    failed = []
+    for name in names:
+        mod_path, _ = REGISTRY[name]
+        try:
+            importlib.import_module(mod_path).main()
+        except Exception:  # noqa: BLE001 — one entry failing must not hide the rest
+            failed.append(name)
+            traceback.print_exc()
+    return failed
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python benchmarks/run.py",
+        description="Run paper figure/table benchmarks by registry name.",
     )
+    ap.add_argument("names", nargs="*", help="registry entries to run (default: all)")
+    ap.add_argument("--list", action="store_true", help="list registry entries and exit")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for name, (mod_path, desc) in REGISTRY.items():
+            print(f"{name:8s} {desc}  [{mod_path}]")
+        return 0
+
+    names = args.names or list(REGISTRY)
+    unknown = [n for n in names if n not in REGISTRY]
+    if unknown:
+        ap.error(f"unknown entries {unknown}; known: {sorted(REGISTRY)}")
 
     print("name,us_per_call,derived")
-    failed = []
-    for mod in (
-        table2_energy,
-        fig15a_error_comp,
-        fig15b_accuracy_pdp,
-        caxcnn_compare,
-        kernel_bench,
-        lm_ptq,
-        calib_bench,
-    ):
-        try:
-            mod.main()
-        except Exception:  # noqa: BLE001
-            failed.append(mod.__name__)
-            traceback.print_exc()
+    failed = run(names)
     if failed:
         print(f"FAILED: {failed}", file=sys.stderr)
-        raise SystemExit(1)
+        return 1
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

@@ -1,0 +1,23 @@
+#!/usr/bin/env bash
+# Full benchmark refresh: re-tunes the kernel block-size cache, then
+# runs BOTH workload tiers (smoke + full) of both suites and rewrites
+# the committed baselines at the repo root:
+#
+#   src/repro/bench/autotune_cache.json   block-size autotune cache
+#   BENCH_kernels.json / BENCH_e2e.json   benchmark baselines
+#
+# Run this (and commit the result) whenever a PR intentionally changes
+# performance or adds workloads; CI's bench-smoke job gates every PR's
+# smoke-tier wall-clock against these files (DESIGN.md §7).
+#
+# Usage: scripts/bench.sh [extra args for python -m repro.bench]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+echo "== autotune + full benchmark run =="
+python -m repro.bench --autotune --out-dir . "$@"
+
+echo "== validate emitted artifacts =="
+python -m repro.bench --validate BENCH_kernels.json BENCH_e2e.json

@@ -1,0 +1,272 @@
+"""Block-size autotuner for the fused decode+matmul Pallas kernel.
+
+The seed kernels ran hardcoded 128-cubed blocks for every shape. This
+module searches ``(block_m, block_n, block_k)`` — and, for 4-bit
+formats, the nibble storage mode — per ``(M, K, N, fmt, backend)`` and
+persists the winners in a JSON cache, so
+``quantized_matmul(..., block_sizes="auto")`` /
+``quantized_conv2d(..., block_sizes="auto")`` resolve each shape to its
+measured-best tiling with a trace-time dict lookup.
+
+Numeric-stability contract: by default the search pins ``block_k`` to
+the kernel default. Splitting K differently regroups the float32
+accumulation (``acc += dot(x_tile, w_tile)`` per K step), which changes
+last-ulp rounding — and the repo's tests pin packed outputs bit-exactly
+against the default tiling. ``block_m``/``block_n`` only re-tile which
+output elements share a kernel invocation; every output element still
+sums the same products in the same order, so those candidates are
+bit-identical and safe to tune freely. Pass ``bit_stable=False`` to
+search K splits too (e.g. on real TPU where the extra headroom is worth
+re-baselining the tolerances).
+
+Cache layout (``autotune_cache.json``, committed next to this module)::
+
+    {"schema_version": 1,
+     "entries": {"cpu|elp_bsd_a4|nib|128x256x128":
+                   {"blocks": [128, 128, 128], "wall_us": 812.4,
+                    "candidates": 4, "bit_stable": true}, ...}}
+
+The key embeds the backend because interpret-mode wall-clock on CPU and
+Mosaic wall-clock on TPU rank candidates differently; a cache produced
+on one never leaks onto the other. ``REPRO_AUTOTUNE_CACHE`` overrides
+the cache path (tests point it at a tmpdir).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Iterable, Sequence
+
+import jax
+import numpy as np
+
+DEFAULT_BLOCKS = (128, 128, 128)
+CACHE_SCHEMA_VERSION = 1
+CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
+
+# In-memory cache of the parsed file, keyed by path so tests that
+# repoint CACHE_ENV never see stale entries.
+_loaded: dict[str, dict] = {}
+
+
+def cache_path() -> str:
+    return os.environ.get(
+        CACHE_ENV, os.path.join(os.path.dirname(__file__), "autotune_cache.json")
+    )
+
+
+def cache_key(m: int, k: int, n: int, fmt_name: str, nibble: bool, backend: str) -> str:
+    return f"{backend}|{fmt_name}|{'nib' if nibble else 'u8'}|{m}x{k}x{n}"
+
+
+def _read_cache(path: str) -> dict:
+    """Parsed ``entries`` dict; corrupt or missing files read as empty.
+
+    Corruption falls back rather than raising because the cache is an
+    optimization: a bad file must degrade to default blocks, not take
+    down a serve path that asked for ``"auto"``.
+    """
+    if path in _loaded:
+        return _loaded[path]
+    entries: dict = {}
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+        if isinstance(doc, dict) and doc.get("schema_version") == CACHE_SCHEMA_VERSION:
+            raw = doc.get("entries", {})
+            if isinstance(raw, dict):
+                for key, ent in raw.items():
+                    blocks = ent.get("blocks") if isinstance(ent, dict) else None
+                    if (
+                        isinstance(blocks, list)
+                        and len(blocks) == 3
+                        and all(isinstance(b, int) and b > 0 for b in blocks)
+                    ):
+                        entries[key] = ent
+    except (OSError, json.JSONDecodeError):
+        entries = {}
+    _loaded[path] = entries
+    return entries
+
+
+def invalidate_memory_cache() -> None:
+    """Drop the in-process cache (tests; after an external refresh)."""
+    _loaded.clear()
+
+
+def lookup_blocks(
+    m: int,
+    k: int,
+    n: int,
+    *,
+    fmt_name: str,
+    nibble: bool,
+    backend: str | None = None,
+) -> tuple[int, int, int]:
+    """Resolve ``(block_m, block_n, block_k)`` for a matmul shape.
+
+    Exact-key cache hit wins; a miss returns :data:`DEFAULT_BLOCKS`
+    (never raises — "auto" must be safe to request for shapes nobody
+    tuned yet).
+    """
+    backend = backend or jax.default_backend()
+    entries = _read_cache(cache_path())
+    ent = entries.get(cache_key(m, k, n, fmt_name, nibble, backend))
+    if ent is None:
+        return DEFAULT_BLOCKS
+    bm, bn, bk = ent["blocks"]
+    if nibble and bk % 2:
+        return DEFAULT_BLOCKS
+    return (bm, bn, bk)
+
+
+def candidate_blocks(
+    m: int,
+    k: int,
+    n: int,
+    *,
+    nibble: bool,
+    bit_stable: bool = True,
+    sizes: Sequence[int] = (128, 256, 512),
+) -> list[tuple[int, int, int]]:
+    """MXU-aligned candidate tilings for one shape.
+
+    Prunes blocks larger than the next 128-multiple of the dim (pure
+    padding waste) and, in ``bit_stable`` mode, fixes ``block_k`` at the
+    default so every candidate is bit-identical (see module docstring).
+    """
+
+    def dims(size: int) -> list[int]:
+        ceil128 = -(-max(size, 1) // 128) * 128
+        out = [s for s in sizes if s <= ceil128]
+        return out or [sizes[0]]
+
+    kdims = [DEFAULT_BLOCKS[2]] if bit_stable else [s for s in dims(k) if not nibble or s % 2 == 0]
+    cands = []
+    for bm in dims(m):
+        for bn in dims(n):
+            for bk in kdims:
+                cands.append((bm, bn, bk))
+    return cands
+
+
+def autotune_matmul(
+    m: int,
+    k: int,
+    n: int,
+    fmt,
+    *,
+    nibble: bool | None = None,
+    bit_stable: bool = True,
+    iters: int = 3,
+    warmup: int = 1,
+    seed: int = 0,
+    backend: str | None = None,
+    write: bool = True,
+) -> dict:
+    """Measure candidates for one shape and record the winner.
+
+    Builds a seeded random activation/weight pair, times the pallas path
+    under every :func:`candidate_blocks` tiling, and (optionally) merges
+    the best into the persistent cache. Returns the written entry plus
+    the full ranking (``{"key", "blocks", "wall_us", "ranking"}``).
+
+    On CPU the kernel runs in interpret mode, so the *absolute* numbers
+    are not TPU-representative; the machinery, cache shape, and key
+    structure are identical on both, and the TPU cache is produced by
+    the same call on a TPU host.
+    """
+    import jax.numpy as jnp
+
+    from repro.core.elp_bsd import PRESET_FORMATS
+    from repro.kernels.ops import pack_weight, quantized_matmul
+
+    if isinstance(fmt, str):
+        fmt = PRESET_FORMATS[fmt]
+    actual = jax.default_backend()
+    if backend is not None and backend != actual:
+        # The measurement always runs on the local backend; accepting a
+        # foreign label would store interpreter-ranked winners under the
+        # other backend's keys and poison its cache.
+        raise ValueError(
+            f"cannot tune for backend {backend!r} on a {actual!r} host; "
+            "run the tuner on the target backend"
+        )
+    backend = actual
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(k, n)) * 0.02, jnp.float32)
+    pw, _ = pack_weight(w, fmt, compensate=False, nibble=nibble)
+
+    from repro.bench.harness import time_fn
+
+    ranking = []
+    for blocks in candidate_blocks(m, k, n, nibble=pw.nibble, bit_stable=bit_stable):
+        t = time_fn(
+            lambda b=blocks: quantized_matmul(x, pw, impl="pallas", block_sizes=b),
+            iters=iters,
+            warmup=warmup,
+        )
+        ranking.append({"blocks": list(blocks), "wall_us": t.min_us})
+    ranking.sort(key=lambda r: r["wall_us"])
+    best = ranking[0]
+    key = cache_key(m, k, n, fmt.name, pw.nibble, backend)
+    entry = {
+        "blocks": best["blocks"],
+        "wall_us": best["wall_us"],
+        "candidates": len(ranking),
+        "bit_stable": bool(bit_stable),
+    }
+    if write:
+        write_entries({key: entry})
+    return {"key": key, "ranking": ranking, **entry}
+
+
+def sweep_nibble(m: int, k: int, n: int, fmt, **kw) -> list[dict]:
+    """Autotune a 4-bit shape under both storage modes (u8 and nibble).
+
+    Each mode lands under its own cache key; the returned results let
+    callers compare decode cost vs HBM savings per backend.
+    """
+    return [autotune_matmul(m, k, n, fmt, nibble=nib, **kw) for nib in (False, True)]
+
+
+def write_entries(new_entries: dict) -> None:
+    """Merge entries into the cache file (read-modify-write, atomic rename).
+
+    Unlike the read path (which degrades a corrupt file to "no cache"),
+    writing REFUSES to proceed over an existing file it cannot parse:
+    merging into the empty fallback would silently wipe every entry the
+    file held (e.g. committed TPU tunings after a merge-conflict
+    marker, or a future schema version). Delete or fix the file first.
+    """
+    path = cache_path()
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+            ok = isinstance(doc, dict) and doc.get("schema_version") == CACHE_SCHEMA_VERSION
+        except (OSError, json.JSONDecodeError):
+            ok = False
+        if not ok:
+            raise RuntimeError(
+                f"refusing to overwrite unreadable/foreign autotune cache {path}; "
+                "delete it (or fix the JSON / schema_version) and re-run"
+            )
+    entries = dict(_read_cache(path))
+    entries.update(new_entries)
+    doc = {"schema_version": CACHE_SCHEMA_VERSION, "entries": dict(sorted(entries.items()))}
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    os.replace(tmp, path)
+    _loaded[path] = entries
+
+
+def autotune_shapes(shapes: Iterable[tuple], **kw) -> list[dict]:
+    """Tune a batch of ``(m, k, n, fmt, nibble)`` specs (bench.sh entry)."""
+    out = []
+    for m, k, n, fmt, nib in shapes:
+        out.append(autotune_matmul(m, k, n, fmt, nibble=nib, **kw))
+    return out

@@ -1,0 +1,75 @@
+"""Shared measurement harness: wall-clock, HLO cost, run documents.
+
+One workload measurement produces:
+
+  * ``wall_us`` — median-of-k wall-clock per jitted call (after warmup
+    calls that absorb compilation), per execution variant ("xla",
+    "pallas", ...). Medians because CI runners have noisy tails.
+  * ``hlo`` — FLOPs / bytes-accessed / collective wire bytes of the
+    compiled graph via :mod:`repro.launch.hlo_stats`. On the CPU-only
+    CI these bytes are the stable proxy for the paper's energy claim
+    (energy ∝ data moved; DESIGN.md §2/§7): wall-clock varies per
+    runner, compiled-graph traffic does not.
+  * ``quality`` — workload-defined numeric fidelity metrics (output MSE
+    vs the float path, packed-byte ratios) so a perf win that silently
+    degrades accuracy shows up in the same artifact.
+
+Everything lands in a schema-versioned document
+(:mod:`repro.bench.schema`) written as ``BENCH_<suite>.json``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.launch.hlo_stats import compiled_cost
+
+
+@dataclasses.dataclass(frozen=True)
+class Timing:
+    median_us: float
+    min_us: float
+    iters: int
+    warmup: int
+
+    def to_json(self) -> dict:
+        return {
+            "median_us": round(self.median_us, 2),
+            "min_us": round(self.min_us, 2),
+            "iters": self.iters,
+            "warmup": self.warmup,
+        }
+
+
+def time_fn(fn: Callable[[], Any], *, iters: int = 5, warmup: int = 2) -> Timing:
+    """Median/min wall-clock microseconds of ``fn()`` (blocks on results)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    return Timing(float(np.median(ts) * 1e6), float(np.min(ts) * 1e6), iters, warmup)
+
+
+def hlo_cost(fn: Callable, *args, **kwargs) -> dict:
+    """FLOPs / bytes-accessed / collective bytes of ``jit(fn)(*args)``.
+
+    Compiles (does not run) the function; numbers come from XLA's cost
+    analysis of the optimized module plus the HLO-text collective
+    parser (:func:`repro.launch.hlo_stats.compiled_cost`). Returns
+    ``None`` values if the backend exposes no cost model for the graph
+    (e.g. callbacks from interpret-mode pallas).
+    """
+    return compiled_cost(jax.jit(fn).lower(*args, **kwargs).compile())
+
+
+def output_mse(got, want) -> float:
+    g = np.asarray(got, np.float64)
+    w = np.asarray(want, np.float64)
+    return float(np.mean((g - w) ** 2))

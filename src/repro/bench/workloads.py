@@ -1,0 +1,422 @@
+"""Deterministic benchmark workloads over the packed execution paths.
+
+Every spec pins its shapes and seeds at module load, so two runs of the
+same tier produce identical entry names, shape blocks, byte counts and
+quality metrics — only wall-clock varies. That is the determinism
+contract CI's schema check and regression gate rely on.
+
+Suites:
+
+``kernels`` — single packed ops:
+  * ``matmul/<fmt>/<mode>/MxKxN`` — fused decode+matmul over fc-layer
+    and LM serve-decode GEMM shapes; pallas (interpret on CPU) and XLA
+    dequant-fused variants, HLO cost of the XLA path, output MSE vs the
+    float matmul, and the HBM weight-byte ratio (the paper's Sec. IV-4
+    bytes-per-MAC story).
+  * ``conv2d/<net>/conv<i>/<fmt>/bB`` — packed conv over the actual
+    ALEXNET_MINI / VGG_MINI layer shapes (im2col → kernel).
+
+``e2e`` — whole forwards:
+  * ``cnn_fwd/<net>/<variant>/bB`` — float vs packed, dynamic vs
+    calibrated static activation quantization (DESIGN.md §6).
+  * ``lm_decode/<arch>/<quant>/bBsS`` — the packed serve decode step.
+
+CPU caveat, encoded per-workload: interpret-mode pallas wall-clock is
+only measured when the kernel grid is small enough to be meaningful
+(``_MAX_CPU_GRID_STEPS``); larger grids record ``null`` for the pallas
+timing and keep the XLA wall-clock + HLO bytes as the CI signal. On a
+TPU host the same specs measure the real kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.bench import harness
+from repro.bench.registry import WorkloadSpec, register
+
+F32 = jnp.float32
+
+# Interpret-mode pallas executes grid steps as a Python loop; cap the
+# grid so a single CPU measurement stays under ~1 s.
+_MAX_CPU_GRID_STEPS = 256
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _grid_steps(m: int, k: int, n: int, blocks=(128, 128, 128)) -> int:
+    bm, bn, bk = blocks
+    return _ceil_div(m, bm) * _ceil_div(n, bn) * _ceil_div(k, bk)
+
+
+def _measure_pallas_cpu(m: int, k: int, n: int) -> bool:
+    return jax.default_backend() == "tpu" or _grid_steps(m, k, n) <= _MAX_CPU_GRID_STEPS
+
+
+# ---------------------------------------------------------------------------
+# Layer-shape extraction from the CNN specs (single source of truth)
+# ---------------------------------------------------------------------------
+def conv_layer_shapes(spec) -> list[tuple[int, object, int, int]]:
+    """``[(layer_idx, Conv, input_hw, input_ch), ...]`` walking the spec."""
+    from repro.models import cnn
+
+    out = []
+    hw, ch, idx = spec.input_hw, spec.input_ch, 0
+    for layer in spec.layers:
+        if isinstance(layer, cnn.Conv):
+            out.append((idx, layer, hw, ch))
+            hw //= layer.stride
+            ch = layer.ch
+            idx += 1
+        elif isinstance(layer, cnn.Pool):
+            hw //= layer.stride
+        elif isinstance(layer, cnn.Fc):
+            idx += 1
+    return out
+
+
+def fc_layer_shapes(spec) -> list[tuple[int, int, int]]:
+    """``[(layer_idx, fan_in, fan_out), ...]`` for the fc layers."""
+    from repro.models import cnn
+
+    out = []
+    hw, ch, idx = spec.input_hw, spec.input_ch, 0
+    flat = None
+    for layer in spec.layers:
+        if isinstance(layer, cnn.Conv):
+            hw //= layer.stride
+            ch = layer.ch
+            idx += 1
+        elif isinstance(layer, cnn.Pool):
+            hw //= layer.stride
+        elif isinstance(layer, cnn.Fc):
+            fan_in = flat if flat is not None else hw * hw * ch
+            out.append((idx, fan_in, layer.out))
+            flat = layer.out
+            idx += 1
+    return out
+
+
+# ---------------------------------------------------------------------------
+# kernels suite
+# ---------------------------------------------------------------------------
+def _run_matmul(m, k, n, fmt_name, nibble, iters, warmup):
+    from repro.core.elp_bsd import PRESET_FORMATS
+    from repro.kernels.ops import pack_weight, quantized_matmul
+
+    fmt = PRESET_FORMATS[fmt_name]
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.normal(size=(m, k)), F32)
+    w = jnp.asarray(rng.normal(size=(k, n)) * 0.02, F32)
+    pw, _ = pack_weight(w, fmt, compensate=True, nibble=nibble)
+
+    xla_fn = lambda: quantized_matmul(x, pw, impl="xla")  # noqa: E731
+    wall = {"xla": harness.time_fn(xla_fn, iters=iters, warmup=warmup).to_json()}
+    if _measure_pallas_cpu(m, k, n):
+        pallas_fn = lambda: quantized_matmul(x, pw, impl="pallas", block_sizes="auto")  # noqa: E731
+        wall["pallas"] = harness.time_fn(pallas_fn, iters=iters, warmup=warmup).to_json()
+    else:
+        wall["pallas"] = None
+
+    bf16_bytes = k * n * 2
+    return {
+        "workload": "matmul",
+        "shape": {"m": m, "k": k, "n": n, "fmt": fmt_name, "nibble": int(nibble)},
+        "wall_us": wall,
+        "hlo": harness.hlo_cost(lambda a, p: quantized_matmul(a, p, impl="xla"), x, pw),
+        "quality": {"out_mse": harness.output_mse(quantized_matmul(x, pw, impl="xla"), x @ w)},
+        "bytes": {
+            "weight_bytes": pw.nbytes + pw.sf.size * 4,
+            "bf16_bytes": bf16_bytes,
+            "hbm_weight_ratio": round(bf16_bytes / pw.nbytes, 3),
+        },
+    }
+
+
+def _run_conv2d(net, idx, layer_k, stride, batch, hw, cin, cout, fmt_name, iters, warmup):
+    from repro.core.elp_bsd import PRESET_FORMATS
+    from repro.kernels.conv import quantized_conv2d
+    from repro.kernels.ops import pack_conv_weight
+
+    fmt = PRESET_FORMATS[fmt_name]
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.normal(size=(batch, hw, hw, cin)), F32)
+    w = jnp.asarray(rng.normal(size=(layer_k, layer_k, cin, cout)) * 0.05, F32)
+    pw, _ = pack_conv_weight(w, fmt, compensate=True)
+
+    xla_fn = lambda: quantized_conv2d(x, pw, stride=stride, impl="xla")  # noqa: E731
+    wall = {"xla": harness.time_fn(xla_fn, iters=iters, warmup=warmup).to_json()}
+    m_im2col = batch * _ceil_div(hw, stride) ** 2
+    kdim = layer_k * layer_k * cin
+    if _measure_pallas_cpu(m_im2col, kdim, cout):
+        pallas_fn = lambda: quantized_conv2d(  # noqa: E731
+            x, pw, stride=stride, impl="pallas", block_sizes="auto"
+        )
+        wall["pallas"] = harness.time_fn(pallas_fn, iters=iters, warmup=warmup).to_json()
+    else:
+        wall["pallas"] = None
+
+    ref = jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+    return {
+        "workload": "conv2d",
+        "shape": {
+            "net": net,
+            "layer": idx,
+            "batch": batch,
+            "hw": hw,
+            "cin": cin,
+            "cout": cout,
+            "ksize": layer_k,
+            "stride": stride,
+            "fmt": fmt_name,
+        },
+        "wall_us": wall,
+        "hlo": harness.hlo_cost(
+            lambda a, p: quantized_conv2d(a, p, stride=stride, impl="xla"), x, pw
+        ),
+        "quality": {
+            "out_mse": harness.output_mse(quantized_conv2d(x, pw, stride=stride, impl="xla"), ref)
+        },
+        "bytes": {"weight_bytes": pw.nbytes + pw.sf.size * 4, "f32_bytes": int(w.size) * 4},
+    }
+
+
+def _register_kernel_suite() -> None:
+    from repro.models import cnn
+
+    # Packed matmuls: the mini nets' fc layers (smoke at batch 8, full
+    # at batch 128) plus an LM serve-decode GEMM shape.
+    matmuls = []
+    for spec in (cnn.ALEXNET_MINI, cnn.VGG_MINI):
+        for _, fan_in, fan_out in fc_layer_shapes(spec):
+            matmuls.append(("smoke", 8, fan_in, fan_out))
+            matmuls.append(("full", 128, fan_in, fan_out))
+    matmuls.append(("full", 4, 2048, 2048))  # LM decode-step GEMM
+    seen = set()
+    for tier, m, k, n in matmuls:
+        for fmt_name, nibble in (("elp_bsd_a4", True), ("elp_bsd_c6", False)):
+            mode = "nib" if nibble else "u8"
+            name = f"matmul/{fmt_name}/{mode}/{m}x{k}x{n}"
+            if name in seen:
+                continue
+            seen.add(name)
+            register(
+                WorkloadSpec(
+                    name=name,
+                    suite="kernels",
+                    tier=tier,
+                    run=functools.partial(_run_matmul, m, k, n, fmt_name, nibble),
+                    tags=("matmul", fmt_name),
+                    autotune_shape=(m, k, n, fmt_name, nibble),
+                )
+            )
+
+    # Packed convs: every conv layer of both mini nets, FORMAT_A nibble
+    # (the paper's 4-bit story), smoke at batch 2, full at batch 32.
+    for spec in (cnn.ALEXNET_MINI, cnn.VGG_MINI):
+        for idx, layer, hw, cin in conv_layer_shapes(spec):
+            for tier, batch in (("smoke", 2), ("full", 32)):
+                name = f"conv2d/{spec.name}/conv{idx}/elp_bsd_a4/b{batch}"
+                m_im2col = batch * _ceil_div(hw, layer.stride) ** 2
+                register(
+                    WorkloadSpec(
+                        name=name,
+                        suite="kernels",
+                        tier=tier,
+                        run=functools.partial(
+                            _run_conv2d,
+                            spec.name,
+                            idx,
+                            layer.k,
+                            layer.stride,
+                            batch,
+                            hw,
+                            cin,
+                            layer.ch,
+                            "elp_bsd_a4",
+                        ),
+                        tags=("conv2d", spec.name),
+                        autotune_shape=(
+                            m_im2col,
+                            layer.k * layer.k * cin,
+                            layer.ch,
+                            "elp_bsd_a4",
+                            True,
+                        ),
+                    )
+                )
+
+
+# ---------------------------------------------------------------------------
+# e2e suite
+# ---------------------------------------------------------------------------
+def _cnn_setup(spec_name: str, batch: int):
+    from repro.models import cnn
+
+    spec = {"alexnet_mini": cnn.ALEXNET_MINI, "vgg_mini": cnn.VGG_MINI}[spec_name]
+    params = cnn.init_params(spec, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(batch, spec.input_hw, spec.input_hw, spec.input_ch)), F32)
+    return spec, params, x
+
+
+def _run_cnn_fwd(spec_name, batch, variant, iters, warmup):
+    from repro.core.elp_bsd import PRESET_FORMATS
+    from repro.models import cnn
+
+    spec, params, x = _cnn_setup(spec_name, batch)
+    quality: dict = {}
+    bytes_blk = None
+
+    if variant == "float":
+        fwd = jax.jit(lambda p, a: cnn.forward(p, spec, a))
+        run_params = params
+    else:
+        float_logits = jax.jit(lambda p, a: cnn.forward(p, spec, a))(params, x)
+        qp = cnn.quantize_params(params, PRESET_FORMATS["elp_bsd_a4"])
+        run_params = qp
+        pw_bytes = cnn.packed_weight_bytes(qp)
+        f32_bytes = sum(
+            int(w.size) * 4 for k, w in params.items() if k.endswith("_w")
+        )
+        bytes_blk = {
+            "weight_bytes": pw_bytes,
+            "f32_bytes": f32_bytes,
+            "compression": round(f32_bytes / pw_bytes, 3),
+        }
+        if variant == "packed":
+            # On TPU the packed forward drives the fused kernel with
+            # autotuned blocks; on CPU impl="xla" ignores block_sizes
+            # (interpret-mode pallas would swamp the e2e timing).
+            impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+            fwd = jax.jit(
+                lambda p, a: cnn.forward(p, spec, a, impl=impl, block_sizes="auto")
+            )
+        elif variant == "packed_dynamic_act":
+            fwd = jax.jit(lambda p, a: cnn.forward(p, spec, a, act_bits=8))
+        elif variant == "packed_calib":
+            from repro.calib import calibrate_cnn
+
+            rng = np.random.default_rng(5)
+            images = jnp.asarray(
+                rng.normal(size=(4, batch, spec.input_hw, spec.input_hw, spec.input_ch)), F32
+            )
+            table, folded = calibrate_cnn(params, spec, images, bits=8)
+            run_params = cnn.quantize_params(folded, PRESET_FORMATS["elp_bsd_a4"])
+            fwd = jax.jit(lambda p, a: cnn.forward(p, spec, a, calib=table))
+        else:
+            raise ValueError(f"unknown cnn_fwd variant {variant!r}")
+        quality["logits_mse"] = harness.output_mse(fwd(run_params, x), float_logits)
+
+    wall = {"xla": harness.time_fn(lambda: fwd(run_params, x), iters=iters, warmup=warmup).to_json()}
+    return {
+        "workload": "cnn_fwd",
+        "shape": {
+            "net": spec_name,
+            "batch": batch,
+            "hw": spec.input_hw,
+            "variant": variant,
+        },
+        "wall_us": wall,
+        "hlo": harness.hlo_cost(lambda p, a: fwd(p, a), run_params, x),
+        "quality": quality or None,
+        "bytes": bytes_blk,
+    }
+
+
+def _run_lm_decode(arch, quant, batch, prompt_len, iters, warmup):
+    from repro.configs import get_config
+    from repro.data.pipeline import LmDataset
+    from repro.models import get_model
+    from repro.runtime.quantized_params import packed_bytes, quantize_params_for_serving
+
+    cfg = get_config(arch).reduced()
+    api = get_model(cfg)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    float_bytes = packed_bytes(params)
+    if quant != "float":
+        params = quantize_params_for_serving(params, cfg, quant)
+    max_len = prompt_len + 8
+
+    ds = LmDataset(cfg, seq_len=prompt_len, batch=batch, seed=7)
+    batch_np = ds.np_batch(0)
+    tokens = {k: jnp.asarray(v) for k, v in batch_np.items() if k != "labels"}
+    cache = api.init_cache(cfg, batch, max_len)
+
+    prefill = jax.jit(lambda p, b, c: api.prefill(p, cfg, b, c))
+    decode = jax.jit(lambda p, t, c, pos: api.decode_step(p, cfg, t, c, pos))
+    logits, cache = prefill(params, tokens, cache)
+    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    pos = jnp.int32(prompt_len)
+
+    wall = {
+        "xla": harness.time_fn(
+            lambda: decode(params, tok, cache, pos), iters=iters, warmup=warmup
+        ).to_json()
+    }
+    return {
+        "workload": "lm_decode",
+        "shape": {"arch": arch, "quant": quant, "batch": batch, "prompt_len": prompt_len},
+        "wall_us": wall,
+        "hlo": harness.hlo_cost(
+            lambda p, t, c, pos_: api.decode_step(p, cfg, t, c, pos_), params, tok, cache, pos
+        ),
+        "quality": None,
+        "bytes": {"weight_bytes": packed_bytes(params), "float_bytes": float_bytes},
+    }
+
+
+def _register_e2e_suite() -> None:
+    variants = ("float", "packed", "packed_dynamic_act", "packed_calib")
+    for tier, spec_name, batch in (("smoke", "alexnet_mini", 8), ("full", "vgg_mini", 64)):
+        for variant in variants:
+            register(
+                WorkloadSpec(
+                    name=f"cnn_fwd/{spec_name}/{variant}/b{batch}",
+                    suite="e2e",
+                    tier=tier,
+                    run=functools.partial(_run_cnn_fwd, spec_name, batch, variant),
+                    tags=("cnn_fwd", spec_name, variant),
+                )
+            )
+    for tier, batch, prompt_len in (("smoke", 4, 32), ("full", 16, 128)):
+        for quant in ("float", "elp4"):
+            register(
+                WorkloadSpec(
+                    name=f"lm_decode/qwen3_8b/{quant}/b{batch}s{prompt_len}",
+                    suite="e2e",
+                    tier=tier,
+                    run=functools.partial(_run_lm_decode, "qwen3_8b", quant, batch, prompt_len),
+                    tags=("lm_decode", quant),
+                )
+            )
+
+
+_register_kernel_suite()
+_register_e2e_suite()
+
+
+def autotune_shape_specs() -> list[tuple]:
+    """``(m, k, n, fmt, nibble)`` specs covering every registered matmul
+    and im2col'd conv shape — what ``scripts/bench.sh --autotune`` tunes.
+
+    Reads the ``autotune_shape`` each spec declared at registration (on
+    CPU, shapes whose kernel grid is too large for interpret-mode
+    timing are skipped; on TPU everything tunes)."""
+    from repro.bench.registry import specs
+
+    out = set()
+    for s in specs("kernels"):
+        if s.autotune_shape is None:
+            continue
+        m, k, n, _fmt, _nib = s.autotune_shape
+        if _measure_pallas_cpu(m, k, n):
+            out.add(s.autotune_shape)
+    return sorted(out)

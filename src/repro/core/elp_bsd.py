@@ -27,9 +27,7 @@ inside jitted conversion pipelines.
 from __future__ import annotations
 
 import dataclasses
-import itertools
 import math
-from typing import Sequence
 
 import numpy as np
 

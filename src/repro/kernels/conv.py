@@ -74,6 +74,7 @@ def quantized_conv2d(
     block_m: int = 128,
     block_n: int = 128,
     block_k: int = 128,
+    block_sizes: tuple[int, int, int] | str | None = None,
     out_dtype=None,
     interpret: bool | None = None,
 ) -> Array:
@@ -83,6 +84,9 @@ def quantized_conv2d(
     (``source_shape`` carries the conv layout). ``impl="pallas"`` runs
     patch extraction into the fused decode+matmul kernel;
     ``impl="xla"`` dequantizes and calls ``lax.conv_general_dilated``.
+    ``block_sizes`` forwards to :func:`quantized_matmul` — a tuple, or
+    ``"auto"`` to resolve the im2col matmul shape through the autotune
+    cache.
     """
     if pw.source_shape is None or len(pw.source_shape) != 4:
         raise ValueError("quantized_conv2d needs a pack_conv_weight-packed weight")
@@ -107,6 +111,7 @@ def quantized_conv2d(
         block_m=block_m,
         block_n=block_n,
         block_k=block_k,
+        block_sizes=block_sizes,
         out_dtype=out_dtype,
         interpret=interpret,
     )

@@ -82,20 +82,40 @@ def elp_bsd_matmul(
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
+    # Shape/block validation raises (not assert: asserts vanish under
+    # ``python -O``, and a silently mis-tiled kernel reads garbage codes).
+    if x.ndim != 2 or codes.ndim != 2:
+        raise ValueError(
+            f"elp_bsd_matmul takes x[M, K] and codes[K', N]; got x{tuple(x.shape)}, "
+            f"codes{tuple(codes.shape)}"
+        )
     m, kdim = x.shape
+    if block_m <= 0 or block_n <= 0 or block_k <= 0:
+        raise ValueError(f"block sizes must be positive; got ({block_m}, {block_n}, {block_k})")
     if nibble:
         k2, n = codes.shape
-        assert k2 * 2 == kdim, (codes.shape, x.shape)
-        assert block_k % 2 == 0
+        if k2 * 2 != kdim:
+            raise ValueError(
+                f"nibble codes pack two K rows per byte: expected codes[K/2={kdim // 2}, N], "
+                f"got codes{tuple(codes.shape)} against x{tuple(x.shape)}"
+            )
+        if block_k % 2 != 0:
+            raise ValueError(f"nibble mode needs an even block_k (two codes/byte); got {block_k}")
         c_block = (block_k // 2, block_n)
     else:
         kc, n = codes.shape
-        assert kc == kdim, (codes.shape, x.shape)
+        if kc != kdim:
+            raise ValueError(
+                f"codes K dim must match x: got codes{tuple(codes.shape)} "
+                f"against x{tuple(x.shape)}"
+            )
         c_block = (block_k, block_n)
-    assert m % block_m == 0 and n % block_n == 0 and kdim % block_k == 0, (
-        (m, kdim, n),
-        (block_m, block_k, block_n),
-    )
+    if m % block_m or n % block_n or kdim % block_k:
+        raise ValueError(
+            f"shapes must tile evenly: (M, K, N)=({m}, {kdim}, {n}) vs "
+            f"(block_m, block_k, block_n)=({block_m}, {block_k}, {block_n}) "
+            "(the ops wrapper pads to block multiples)"
+        )
     out_dtype = out_dtype or x.dtype
     n_k = kdim // block_k
     grid = (m // block_m, n // block_n, n_k)

@@ -228,7 +228,16 @@ def _pad_to(x: Array, axis: int, mult: int) -> Array:
 
 
 @functools.partial(
-    jax.jit, static_argnames=("impl", "block_m", "block_n", "block_k", "out_dtype", "interpret")
+    jax.jit,
+    static_argnames=(
+        "impl",
+        "block_m",
+        "block_n",
+        "block_k",
+        "block_sizes",
+        "out_dtype",
+        "interpret",
+    ),
 )
 def quantized_matmul(
     x: Array,
@@ -238,6 +247,7 @@ def quantized_matmul(
     block_m: int = 128,
     block_n: int = 128,
     block_k: int = 128,
+    block_sizes: tuple[int, int, int] | str | None = None,
     out_dtype=None,
     interpret: bool | None = None,
 ) -> Array:
@@ -247,6 +257,13 @@ def quantized_matmul(
     (``act_scale``/``act_bits`` aux data), the input is fake-quantized
     against that compile-time constant first — the serve path's
     zero-reduction activation quantization.
+
+    ``block_sizes`` overrides the individual ``block_*`` args: a
+    ``(block_m, block_n, block_k)`` tuple, or ``"auto"`` to resolve the
+    shape through the persistent autotune cache
+    (:mod:`repro.bench.autotune`; falls back to the defaults on a cache
+    miss). Shapes are static under jit, so the lookup happens at trace
+    time and costs nothing per call.
     """
     if pw.act_scale is not None:
         from repro.core.quantize import fake_quant_uniform
@@ -255,7 +272,30 @@ def quantized_matmul(
     k, n = pw.shape
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
+    m0 = x2.shape[0]
     out_dtype = out_dtype or x.dtype
+    # Resolve and validate block_sizes for every impl (the xla path
+    # ignores blocks, but a typo'd value or an odd nibble block_k must
+    # not succeed there and only blow up later on the TPU path).
+    if block_sizes is not None:
+        if block_sizes == "auto":
+            from repro.bench.autotune import lookup_blocks
+
+            block_m, block_n, block_k = lookup_blocks(
+                m0, k, n, fmt_name=pw.fmt_name, nibble=pw.nibble
+            )
+        elif isinstance(block_sizes, tuple) and len(block_sizes) == 3:
+            block_m, block_n, block_k = block_sizes
+        else:
+            raise ValueError(
+                f'block_sizes must be a (block_m, block_n, block_k) tuple, "auto", or None; '
+                f"got {block_sizes!r}"
+            )
+    if pw.nibble and block_k % 2 != 0:
+        raise ValueError(
+            f"nibble-packed weights need an even block_k (two codes per byte along K); "
+            f"got block_k={block_k} for weight {pw.shape} fmt={pw.fmt_name}"
+        )
     if impl == "xla":
         out = jnp.dot(
             x2.astype(jnp.float32), dequantize(pw), preferred_element_type=jnp.float32
@@ -265,8 +305,6 @@ def quantized_matmul(
         raise ValueError(f"unknown impl {impl!r}")
     if pw.codes.ndim != 2:
         raise ValueError("pallas path takes a single [K, N] weight; use impl='xla' for stacks")
-
-    m0 = x2.shape[0]
     # Pad M and K on activations (zero activations contribute zero even
     # against garbage codes — including the nibble pad row); pad N on
     # codes and slice the output.

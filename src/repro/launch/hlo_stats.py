@@ -142,6 +142,29 @@ def cpu_convert_artifact_bytes(hlo_text: str) -> int:
     return total
 
 
+def compiled_cost(compiled) -> dict:
+    """FLOPs / bytes-accessed / collective bytes of a compiled executable.
+
+    Normalizes ``compiled.cost_analysis()`` across jax versions (some
+    backends return a one-element list of dicts) and adds the HLO-text
+    collective parse. Missing backend cost models yield ``None`` for
+    flops/bytes rather than raising — the benchmark harness records the
+    gap instead of dying on it.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    ca = ca or {}
+    flops = ca.get("flops")
+    byts = ca.get("bytes accessed")
+    coll = collective_stats(compiled.as_text()).per_device_bytes
+    return {
+        "flops": float(flops) if flops is not None and flops >= 0 else None,
+        "bytes_accessed": float(byts) if byts is not None and byts >= 0 else None,
+        "collective_bytes": float(coll),
+    }
+
+
 # ---------------------------------------------------------------------------
 # TPU v5e hardware constants (per chip)
 # ---------------------------------------------------------------------------

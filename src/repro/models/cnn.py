@@ -149,6 +149,7 @@ def forward(
     calib=None,
     tap=None,
     impl: str = "xla",
+    block_sizes: tuple[int, int, int] | str | None = None,
     interpret: bool | None = None,
 ) -> Array:
     """x: [B, H, W, C] images → logits [B, n_classes].
@@ -173,7 +174,10 @@ def forward(
     :func:`~repro.kernels.conv.quantized_conv2d` and packed fc layers
     through ``quantized_matmul``, so the whole network executes on
     ELP_BSD codes end-to-end. ``impl`` selects the packed execution path
-    ("xla" dequant-fused fallback, "pallas" fused decode+matmul kernel).
+    ("xla" dequant-fused fallback, "pallas" fused decode+matmul kernel);
+    ``block_sizes`` forwards to the packed kernels (a tuple, or
+    ``"auto"`` to resolve each layer's matmul shape through the
+    autotune cache, DESIGN.md §7).
     """
     from repro.core.quantize import fake_quant_dynamic, fake_quant_uniform
     from repro.kernels.conv import quantized_conv2d
@@ -201,6 +205,7 @@ def forward(
                     stride=l.stride,
                     padding="SAME",
                     impl=impl,
+                    block_sizes=block_sizes,
                     interpret=interpret,
                     out_dtype=F32,
                 )
@@ -226,7 +231,12 @@ def forward(
             w = params[f"fc{idx}_w"]
             if isinstance(w, PackedWeight):
                 x = quantized_matmul(
-                    x.astype(F32), w, impl=impl, interpret=interpret, out_dtype=F32
+                    x.astype(F32),
+                    w,
+                    impl=impl,
+                    block_sizes=block_sizes,
+                    interpret=interpret,
+                    out_dtype=F32,
                 )
             else:
                 x = jnp.dot(x, w.astype(F32))

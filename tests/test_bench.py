@@ -1,0 +1,288 @@
+"""Benchmark subsystem: autotune cache, schema, registry, auto blocks.
+
+The committed ``BENCH_*.json`` baselines are load-bearing (CI's
+bench-smoke job gates wall-clock against them), so their schema is
+tested here against the real files, not just synthetic documents.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.bench import autotune, registry, schema
+from repro.core.elp_bsd import FORMAT_A
+from repro.kernels.ops import pack_weight, quantized_matmul
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture
+def tmp_cache(tmp_path, monkeypatch):
+    """Point the autotune cache at a fresh tmp file for one test."""
+    path = str(tmp_path / "autotune_cache.json")
+    monkeypatch.setenv(autotune.CACHE_ENV, path)
+    autotune.invalidate_memory_cache()
+    yield path
+    autotune.invalidate_memory_cache()
+
+
+# ---------------------------------------------------------------------------
+# Autotune cache round-trip
+# ---------------------------------------------------------------------------
+class TestAutotuneCache:
+    def test_miss_returns_default(self, tmp_cache):
+        blocks = autotune.lookup_blocks(8, 64, 32, fmt_name="elp_bsd_a4", nibble=True)
+        assert blocks == autotune.DEFAULT_BLOCKS
+
+    def test_write_then_hit_and_disk_roundtrip(self, tmp_cache):
+        key = autotune.cache_key(8, 512, 128, "elp_bsd_a4", True, "cpu")
+        autotune.write_entries({key: {"blocks": [256, 128, 128], "wall_us": 10.0}})
+        assert os.path.exists(tmp_cache)
+        got = autotune.lookup_blocks(
+            8, 512, 128, fmt_name="elp_bsd_a4", nibble=True, backend="cpu"
+        )
+        assert got == (256, 128, 128)
+        # Drop the in-memory copy: the same answer must come off disk.
+        autotune.invalidate_memory_cache()
+        got = autotune.lookup_blocks(
+            8, 512, 128, fmt_name="elp_bsd_a4", nibble=True, backend="cpu"
+        )
+        assert got == (256, 128, 128)
+        # Other shapes / backends still miss.
+        assert (
+            autotune.lookup_blocks(8, 512, 128, fmt_name="elp_bsd_a4", nibble=False, backend="cpu")
+            == autotune.DEFAULT_BLOCKS
+        )
+        assert (
+            autotune.lookup_blocks(8, 512, 128, fmt_name="elp_bsd_a4", nibble=True, backend="tpu")
+            == autotune.DEFAULT_BLOCKS
+        )
+
+    def test_write_merges_existing_entries(self, tmp_cache):
+        k1 = autotune.cache_key(8, 128, 128, "elp_bsd_a4", True, "cpu")
+        k2 = autotune.cache_key(8, 256, 128, "elp_bsd_c6", False, "cpu")
+        autotune.write_entries({k1: {"blocks": [128, 128, 128]}})
+        autotune.write_entries({k2: {"blocks": [256, 256, 128]}})
+        autotune.invalidate_memory_cache()
+        with open(tmp_cache) as f:
+            doc = json.load(f)
+        assert set(doc["entries"]) == {k1, k2}
+        assert doc["schema_version"] == autotune.CACHE_SCHEMA_VERSION
+
+    @pytest.mark.parametrize(
+        "content",
+        [
+            "not json at all {",
+            json.dumps({"schema_version": 999, "entries": {}}),
+            json.dumps({"schema_version": 1, "entries": "nope"}),
+            json.dumps(
+                {"schema_version": 1, "entries": {"cpu|f|nib|1x2x3": {"blocks": [0, -1, "x"]}}}
+            ),
+        ],
+        ids=["garbage", "bad-version", "bad-entries", "bad-blocks"],
+    )
+    def test_corrupt_cache_degrades_to_default(self, tmp_cache, content):
+        with open(tmp_cache, "w") as f:
+            f.write(content)
+        blocks = autotune.lookup_blocks(1, 2, 3, fmt_name="f", nibble=True, backend="cpu")
+        assert blocks == autotune.DEFAULT_BLOCKS
+
+    def test_write_refuses_to_clobber_corrupt_cache(self, tmp_cache):
+        """Reads degrade to defaults, but writes must not silently wipe
+        an existing file they cannot parse (e.g. committed TPU entries
+        behind a merge-conflict marker)."""
+        with open(tmp_cache, "w") as f:
+            f.write("not json {")
+        with pytest.raises(RuntimeError, match="refusing"):
+            autotune.write_entries({"k": {"blocks": [128, 128, 128]}})
+        with open(tmp_cache) as f:
+            assert f.read() == "not json {"  # untouched
+
+    def test_autotune_matmul_populates_cache(self, tmp_cache):
+        res = autotune.autotune_matmul(
+            8, 64, 32, FORMAT_A, iters=1, warmup=1, backend="cpu"
+        )
+        assert res["blocks"] == [128, 128, 128]  # single candidate at tiny dims
+        assert res["candidates"] == len(res["ranking"]) >= 1
+        autotune.invalidate_memory_cache()
+        got = autotune.lookup_blocks(8, 64, 32, fmt_name="elp_bsd_a4", nibble=True, backend="cpu")
+        assert got == tuple(res["blocks"])
+
+    def test_sweep_nibble_tunes_both_storage_modes(self, tmp_cache):
+        results = autotune.sweep_nibble(8, 64, 32, FORMAT_A, iters=1, warmup=1)
+        keys = {r["key"] for r in results}
+        assert keys == {
+            autotune.cache_key(8, 64, 32, "elp_bsd_a4", False, jax.default_backend()),
+            autotune.cache_key(8, 64, 32, "elp_bsd_a4", True, jax.default_backend()),
+        }
+
+    def test_autotune_rejects_foreign_backend(self):
+        other = "tpu" if jax.default_backend() != "tpu" else "cpu"
+        with pytest.raises(ValueError, match="cannot tune for backend"):
+            autotune.autotune_matmul(8, 64, 32, FORMAT_A, backend=other)
+
+    def test_candidates_respect_nibble_and_bit_stability(self):
+        cands = autotune.candidate_blocks(512, 2048, 512, nibble=True, bit_stable=True)
+        assert all(bk == autotune.DEFAULT_BLOCKS[2] for _, _, bk in cands)
+        assert len(cands) > 1  # m/n actually searched
+        free = autotune.candidate_blocks(512, 2048, 512, nibble=True, bit_stable=False)
+        assert {bk for _, _, bk in free} > {128}
+        assert all(bk % 2 == 0 for _, _, bk in free)
+
+
+# ---------------------------------------------------------------------------
+# block_sizes="auto" resolves through the cache, bit-exactly
+# ---------------------------------------------------------------------------
+def test_auto_blocks_bit_exact_vs_default(tmp_cache):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(8, 512)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(512, 128)) * 0.05, jnp.float32)
+    pw, _ = pack_weight(w, FORMAT_A)
+    want = np.asarray(quantized_matmul(x, pw, impl="pallas"))
+
+    # Install a non-default tiling for exactly this shape, then retrace.
+    key = autotune.cache_key(8, 512, 128, "elp_bsd_a4", True, jax.default_backend())
+    autotune.write_entries({key: {"blocks": [256, 256, 128]}})
+    jax.clear_caches()  # "auto" resolves at trace time; force a fresh trace
+    assert autotune.lookup_blocks(8, 512, 128, fmt_name="elp_bsd_a4", nibble=True) == (
+        256,
+        256,
+        128,
+    )
+    got = np.asarray(quantized_matmul(x, pw, impl="pallas", block_sizes="auto"))
+    np.testing.assert_array_equal(got, want)
+
+    # Conv path resolves too (im2col shape) and stays bit-exact.
+    from repro.kernels.conv import quantized_conv2d
+    from repro.kernels.ops import pack_conv_weight
+
+    xc = jnp.asarray(rng.normal(size=(2, 8, 8, 8)), jnp.float32)
+    wc = jnp.asarray(rng.normal(size=(3, 3, 8, 16)) * 0.1, jnp.float32)
+    pwc, _ = pack_conv_weight(wc, FORMAT_A)
+    ref = np.asarray(quantized_conv2d(xc, pwc, impl="pallas"))
+    got = np.asarray(quantized_conv2d(xc, pwc, impl="pallas", block_sizes="auto"))
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_explicit_block_sizes_tuple_and_bad_value():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(8, 128)), jnp.float32)
+    pw, _ = pack_weight(jnp.asarray(rng.normal(size=(128, 64)) * 0.1, jnp.float32), FORMAT_A)
+    want = np.asarray(quantized_matmul(x, pw, impl="pallas"))
+    got = np.asarray(quantized_matmul(x, pw, impl="pallas", block_sizes=(256, 128, 128)))
+    np.testing.assert_array_equal(got, want)
+    # Misuse raises on the xla fallback too, not only once on TPU.
+    for impl in ("pallas", "xla"):
+        with pytest.raises(ValueError, match="block_sizes"):
+            quantized_matmul(x, pw, impl=impl, block_sizes="fastest")
+        with pytest.raises(ValueError, match="even block_k"):
+            quantized_matmul(x, pw, impl=impl, block_sizes=(128, 128, 127))
+
+
+# ---------------------------------------------------------------------------
+# Schema: the committed baselines and the validator itself
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("fname", ["BENCH_kernels.json", "BENCH_e2e.json"])
+def test_committed_baselines_validate(fname):
+    path = os.path.join(REPO_ROOT, fname)
+    assert os.path.exists(path), f"{fname} must be committed at the repo root (scripts/bench.sh)"
+    with open(path) as f:
+        doc = json.load(f)
+    schema.validate(doc, suite=fname.split("_")[1].split(".")[0])
+    # Smoke-tier entries are what CI re-measures and gates on.
+    smoke = [n for n, e in doc["entries"].items() if e["tier"] == "smoke"]
+    assert smoke, f"{fname} has no smoke-tier entries for the CI gate"
+
+
+def _minimal_doc():
+    return {
+        "schema_version": schema.SCHEMA_VERSION,
+        "suite": "kernels",
+        "backend": "cpu",
+        "jax_version": "0.0.test",
+        "smoke_only": True,
+        "entries": {
+            "matmul/x": {
+                "workload": "matmul",
+                "tier": "smoke",
+                "shape": {"m": 8, "k": 16, "n": 4, "fmt": "f", "dims": [8, 16, 4]},
+                "wall_us": {
+                    "xla": {"median_us": 1.0, "min_us": 0.5, "iters": 3, "warmup": 1},
+                    "pallas": None,
+                },
+                "hlo": {"flops": 1.0, "bytes_accessed": None, "collective_bytes": 0.0},
+                "quality": {"out_mse": 0.1},
+                "bytes": None,
+            }
+        },
+    }
+
+
+def test_schema_accepts_minimal_doc():
+    schema.validate(_minimal_doc())
+
+
+@pytest.mark.parametrize(
+    "mutate",
+    [
+        lambda d: d.update(schema_version=2),
+        lambda d: d.update(suite="vibes"),
+        lambda d: d.update(entries={}),
+        lambda d: d.pop("smoke_only"),
+        lambda d: d["entries"]["matmul/x"].update(tier="warm"),
+        lambda d: d["entries"]["matmul/x"].update(shape={}),
+        lambda d: d["entries"]["matmul/x"]["wall_us"]["xla"].update(median_us=-1),
+        lambda d: d["entries"]["matmul/x"]["wall_us"]["xla"].pop("iters"),
+        lambda d: d["entries"]["matmul/x"].update(hlo={"flops": 1.0}),
+        lambda d: d["entries"]["matmul/x"].update(quality={"mse": "tiny"}),
+    ],
+    ids=[
+        "version", "suite", "no-entries", "no-smoke-flag", "bad-tier",
+        "empty-shape", "negative-median", "missing-iters", "hlo-missing-keys",
+        "non-numeric-quality",
+    ],
+)
+def test_schema_rejects_malformed(mutate):
+    doc = _minimal_doc()
+    mutate(doc)
+    with pytest.raises(schema.SchemaError):
+        schema.validate(doc)
+
+
+def test_schema_validates_suite_mismatch():
+    with pytest.raises(schema.SchemaError, match="expected suite"):
+        schema.validate(_minimal_doc(), suite="e2e")
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+def test_registry_names_sorted_unique_and_tiered():
+    for suite in ("kernels", "e2e"):
+        all_specs = registry.specs(suite)
+        names = [s.name for s in all_specs]
+        assert names == sorted(names) and len(names) == len(set(names))
+        smoke = registry.specs(suite, smoke_only=True)
+        assert smoke and len(smoke) < len(all_specs)
+        assert all(s.tier == "smoke" for s in smoke)
+    assert registry.specs("kernels", only="conv2d/")
+    with pytest.raises(KeyError):
+        registry.get("not/a/workload")
+
+
+def test_smallest_workload_entry_is_deterministic():
+    """Two runs of one workload agree on everything but wall-clock."""
+    spec = registry.get("matmul/elp_bsd_a4/nib/8x128x10")
+
+    def strip(entry):
+        e = json.loads(json.dumps(entry))  # deep copy
+        for impl, t in e["wall_us"].items():
+            e["wall_us"][impl] = sorted(t) if t else None
+        return e
+
+    a, b = spec.run(1, 1), spec.run(1, 1)
+    assert strip(a) == strip(b)
+    assert a["quality"]["out_mse"] == b["quality"]["out_mse"]

@@ -143,3 +143,49 @@ def test_flash_attention_bf16():
     np.testing.assert_allclose(
         np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=3e-2, atol=3e-2
     )
+
+
+# ---------------------------------------------------------------------------
+# Packed conv: parity grid vs the XLA path, and shape validation errors
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("ksize", [1, 3, 5])
+@pytest.mark.parametrize("stride", [1, 2])
+@pytest.mark.parametrize("padding", ["SAME", "VALID"])
+def test_quantized_conv2d_pallas_matches_xla_grid(ksize, stride, padding):
+    """impl="pallas" (im2col → kernel) vs impl="xla" (dequant → lax.conv)
+    across kernel-size × stride × padding, incl. stride=2 VALID."""
+    from repro.kernels.conv import quantized_conv2d
+    from repro.kernels.ops import pack_conv_weight
+
+    rng = np.random.default_rng(ksize * 10 + stride)
+    x = jnp.asarray(rng.normal(size=(2, 9, 9, 8)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(ksize, ksize, 8, 16)) * 0.1, jnp.float32)
+    pw, _ = pack_conv_weight(w, FORMAT_A)
+    got = quantized_conv2d(
+        x, pw, stride=stride, padding=padding, impl="pallas", interpret=True
+    )
+    want = quantized_conv2d(x, pw, stride=stride, padding=padding, impl="xla")
+    assert got.shape == want.shape, (got.shape, want.shape)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_elp_bsd_matmul_raises_not_asserts():
+    """Shape/block misuse raises ValueError (asserts are stripped under
+    ``python -O``; a silently mis-tiled kernel would read garbage codes)."""
+    rng = np.random.default_rng(9)
+    x = jnp.asarray(rng.normal(size=(128, 128)), jnp.float32)
+    codes = jnp.asarray(rng.integers(0, 16, size=(128, 128)).astype(np.uint8))
+    sf = jnp.float32(0.01)
+
+    with pytest.raises(ValueError, match="tile evenly"):
+        elp_bsd_matmul(x[:100], codes, sf, FORMAT_A, interpret=True)
+    with pytest.raises(ValueError, match="K dim must match"):
+        elp_bsd_matmul(x, codes[:64], sf, FORMAT_A, interpret=True)
+    with pytest.raises(ValueError, match="two K rows per byte"):
+        elp_bsd_matmul(x, codes[:100], sf, FORMAT_A, nibble=True, interpret=True)
+    with pytest.raises(ValueError, match="even block_k"):
+        elp_bsd_matmul(x, codes[:64], sf, FORMAT_A, nibble=True, block_k=63, interpret=True)
+    with pytest.raises(ValueError, match="must be positive"):
+        elp_bsd_matmul(x, codes, sf, FORMAT_A, block_m=0, interpret=True)
+    with pytest.raises(ValueError, match="x\\[M, K\\]"):
+        elp_bsd_matmul(x[0], codes, sf, FORMAT_A, interpret=True)
