@@ -9,18 +9,18 @@ serve forward (ELP_BSD weights, im2col conv path):
   * wall-clock per batch, dynamic vs static vs no activation quant,
   * the number of ``reduce_max`` range reductions in each traced graph
     (the static path must count zero — the acceptance gauge),
-  * the calibration pass itself (one-off convert-time cost).
+  * the one-off convert-time cost (the full ``api.quantize`` call:
+    calibration pass + bias folding + ELP_BSD packing).
 """
 from __future__ import annotations
 
 import time
 
 import jax
-import jax.numpy as jnp
 
 from benchmarks import common
-from repro.calib import calibrate_cnn, count_range_reductions
-from repro.core.elp_bsd import PRESET_FORMATS
+from repro import api
+from repro.calib import count_range_reductions
 from repro.models import cnn
 
 
@@ -30,17 +30,22 @@ def run(spec=cnn.ALEXNET_MINI, bits: int = 8, fmt: str = "elp_bsd_c6") -> dict:
     x = images[0]
 
     t0 = time.perf_counter()
-    table, folded = calibrate_cnn(params, spec, images, bits=bits)
-    calib_ms = (time.perf_counter() - t0) * 1e3
+    qm = api.quantize(
+        spec,
+        params,
+        api.QuantScheme(fmt=fmt, act="static", act_bits=bits),
+        calib_data=images,
+    )
+    convert_ms = (time.perf_counter() - t0) * 1e3
 
-    qparams = cnn.quantize_params(folded, PRESET_FORMATS[fmt])
+    table, qparams = qm.table, qm.params
 
     fwd_fp = jax.jit(lambda p, xx: cnn.forward(p, spec, xx))
     fwd_dyn = jax.jit(lambda p, xx: cnn.forward(p, spec, xx, act_bits=bits))
     fwd_static = jax.jit(lambda p, xx: cnn.forward(p, spec, xx, calib=table))
 
     out = {
-        "calib_ms": calib_ms,
+        "convert_ms": convert_ms,
         "us_fp": common.timed(fwd_fp, qparams, x),
         "us_dynamic": common.timed(fwd_dyn, qparams, x),
         "us_static": common.timed(fwd_static, qparams, x),
@@ -71,7 +76,7 @@ def main() -> None:
         common.emit(
             f"calib_bench_{spec.name}_overheads",
             r["us_fp"],
-            f"calib_pass_ms={r['calib_ms']:.1f};act_quant_cost_static="
+            f"convert_ms={r['convert_ms']:.1f};act_quant_cost_static="
             f"{r['us_static'] - r['us_fp']:+.1f}us;act_quant_cost_dynamic="
             f"{r['us_dynamic'] - r['us_fp']:+.1f}us",
         )

@@ -31,9 +31,16 @@ def _ckpt_path(spec_name: str) -> str:
 
 
 def train_mini_cnn(spec: cnn.CnnSpec, steps: int = 1200, lr: float = 2e-2, seed: int = 0):
-    """Train (or load cached) mini CNN on the synthetic task (momentum SGD)."""
+    """Train (or load cached) mini CNN on the synthetic task (momentum SGD).
+
+    The default budget caches under the spec name (all figure
+    benchmarks quantize the SAME baseline model); a non-default
+    ``steps`` caches separately so a reduced budget (e.g. CI's
+    examples-smoke ``QUICKSTART_STEPS``) really trains that many steps
+    instead of silently loading the default checkpoint.
+    """
     os.makedirs(RESULTS, exist_ok=True)
-    path = _ckpt_path(spec.name)
+    path = _ckpt_path(spec.name if steps == 1200 else f"{spec.name}_s{steps}")
     if os.path.exists(path):
         arrs = np.load(path)
         return {k: jnp.asarray(v) for k, v in arrs.items()}

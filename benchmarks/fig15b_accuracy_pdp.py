@@ -14,6 +14,7 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks import common
+from repro import api
 from repro.core import TABLE2_FORMATS, pdp_fj
 from repro.models import cnn
 
@@ -25,8 +26,8 @@ def run(spec=cnn.ALEXNET_MINI, act_bits_range=(8, 7, 6, 5, 4)) -> list[dict]:
     macs = spec.macs()
     rows = []
     for fmt in TABLE2_FORMATS:
-        qw = cnn.quantize_params(params, fmt, compensate=True)
-        code_bytes = cnn.packed_weight_bytes(qw)
+        qm = api.quantize(spec, params, api.QuantScheme(fmt=fmt, compensate=True))
+        qw, code_bytes = qm.params, qm.report.packed_weight_bytes
         for ab in act_bits_range:
             acc = eval_fn(qw, ab)
             pdp = pdp_fj(fmt.name, ab)

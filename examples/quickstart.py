@@ -1,60 +1,64 @@
-"""Quickstart: CoNLoCNN conversion of a trained CNN in ~50 lines.
+"""Quickstart: CoNLoCNN conversion through the one front door, repro.api.
 
-Trains the mini AlexNet on the synthetic task, runs the full Sec. V
-methodology (critical activation bit-width search → per-layer SF → TQL
-→ nearest-neighbour quantization → Algorithm 1 error compensation →
-accuracy-constraint loop), and reports accuracy, compression, and the
-Table II energy estimate. Then converts the same network to PACKED
-ELP_BSD codes and serves it end-to-end on the packed execution path
-(every conv+fc weight stored as 4-bit codes, decoded in-graph).
+Trains the mini AlexNet on the synthetic task, then runs the ENTIRE
+paper pipeline with a single call — ``repro.api.quantize`` drives the
+critical activation bit-width search (Sec. V steps 1+5), per-layer SF →
+TQL → nearest-neighbour quantization, Algorithm 1 error compensation,
+and ELP_BSD packing — returning a ``QuantizedModel`` that serves
+end-to-end on 4-bit codes and saves/loads as one artifact.
 
 Run:  PYTHONPATH=src:. python examples/quickstart.py
+      QUICKSTART_STEPS=300 ... (smaller training budget, e.g. CI smoke)
 """
+import os
+import tempfile
+
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks import common
-from repro.core import FORMAT_A, convert, network_energy_nj
+from repro import api
 from repro.models import cnn
 
 
 def main() -> None:
     spec = cnn.ALEXNET_MINI
-    print(f"training {spec.name} on the synthetic task ...")
-    params = common.train_mini_cnn(spec)
+    steps = int(os.environ.get("QUICKSTART_STEPS", "1200"))
+    print(f"training {spec.name} on the synthetic task ({steps} steps) ...")
+    params = common.train_mini_cnn(spec, steps=steps)
     eval_fn = common.make_eval_fn(spec)
 
     print("converting with ELP_BSD{SF, s[0..7]} (4 bits/weight) + Algorithm 1 ...")
-    result = convert(
-        params,
-        cnn.weight_group_axes(params),
-        FORMAT_A,
-        lambda w, ab: eval_fn(w, ab),
-        ac=0.01,
-        bw_max=8,
-        bw_min=4,
-    )
-    print(f"  baseline accuracy : {result.baseline_accuracy:.4f}")
-    print(f"  quantized accuracy: {result.accuracy:.4f} (loss {result.accuracy_loss:+.4f})")
-    print(f"  activation bits   : {result.act_bits}")
-    print(f"  weight compression: {result.compression:.1f}x "
-          f"({result.raw_bytes} -> {result.encoded_bytes} bytes)")
-    e = network_energy_nj(spec.macs(), result.encoded_bytes, FORMAT_A.name, result.act_bits)
-    print(f"  est. inference energy: {e['total_nj'] / 1e3:.1f} uJ "
-          f"(compute {e['compute_nj'] / 1e3:.1f} + weights {e['memory_nj'] / 1e3:.1f})")
+    scheme = api.QuantScheme(fmt="elp_bsd_a4", act="dynamic", ac=0.01, bw_max=8, bw_min=4)
+    qm = api.quantize(spec, params, scheme, eval_fn=eval_fn)
+    r = qm.report
+    print(f"  baseline accuracy : {r.baseline_accuracy:.4f}")
+    print(f"  quantized accuracy: {r.accuracy:.4f} (loss {r.accuracy_loss:+.4f})")
+    print(f"  activation bits   : {r.act_bits}")
+    print(f"  weight compression: {r.compression:.1f}x "
+          f"({r.raw_bytes} -> {r.packed_bytes} bytes; "
+          f"bit-packed {r.encoded_bytes} bytes)")
+    print(f"  est. inference energy: {r.energy_nj / 1e3:.1f} uJ")
 
-    print("packing weights to ELP_BSD codes and serving the packed path ...")
-    packed = cnn.quantize_params(params, FORMAT_A, compensate=True)
-    packed_acc = eval_fn(packed, result.act_bits)
-    code_bytes = cnn.packed_weight_bytes(packed)
-    raw_bytes = sum(w.size * w.dtype.itemsize for k, w in params.items() if k.endswith("_w"))
+    print("serving the packed path (every conv+fc weight stored as 4-bit codes) ...")
+    packed_acc = eval_fn(qm.params, r.act_bits)
     x, _ = common.CnnDataset(spec.input_hw, spec.input_ch, common.N_CLASSES, 8).np_batch(0)
-    float_logits = cnn.forward(result.weights, spec, jnp.asarray(x))
-    packed_logits = cnn.forward(packed, spec, jnp.asarray(x))
+    float_logits = cnn.forward(params, spec, jnp.asarray(x))
+    packed_logits = qm.forward(jnp.asarray(x))
     drift = float(jnp.max(jnp.abs(packed_logits - float_logits)))
-    print(f"  packed accuracy   : {packed_acc:.4f} (act bits {result.act_bits})")
-    print(f"  packed weight HBM : {raw_bytes} -> {code_bytes} bytes "
-          f"({raw_bytes / max(code_bytes, 1):.1f}x)")
-    print(f"  packed-vs-float max logit drift: {drift:.2e}")
+    print(f"  packed accuracy   : {packed_acc:.4f} (act bits {r.act_bits})")
+    print(f"  quantized-vs-float max logit error: {drift:.2e}")
+
+    print("saving + reloading the artifact (checksummed manifest) ...")
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, f"{spec.name}_elp4")
+        qm.save(path)
+        qm2 = api.load(path)
+        reload_logits = qm2.forward(jnp.asarray(x))
+        same = bool(np.array_equal(np.asarray(packed_logits), np.asarray(reload_logits)))
+        print(f"  reload forward bit-identical: {same}")
+        if not same:
+            raise SystemExit("save/load round-trip drifted — artifact path broken")
 
 
 if __name__ == "__main__":

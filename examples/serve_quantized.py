@@ -1,20 +1,24 @@
 """Serve a small LM with batched requests and ELP_BSD-encoded weights.
 
-Trains briefly, converts every matmul weight to packed ELP_BSD codes
-(the paper's Sec. V methodology with per-row compensation), then serves
-a batch of prompts through prefill + greedy decode, comparing outputs
-and weight bytes against the unquantized model.
+Trains briefly, converts every matmul weight through the repro.api
+front door (the paper's Sec. V methodology with per-row compensation),
+then serves a batch of prompts through prefill + greedy decode via
+``QuantizedModel.generate``, comparing outputs and weight bytes against
+the unquantized model — including after a save/load round-trip of the
+quantized artifact.
 
 Run:  PYTHONPATH=src:. python examples/serve_quantized.py
+      SERVE_DEMO_STEPS=60 ... (smaller training budget, e.g. CI smoke)
 """
-import jax
+import os
+import tempfile
+
 import jax.numpy as jnp
 import numpy as np
 
+from repro import api
 from repro.configs.base import ArchConfig
-from repro.core import FORMAT_A
 from repro.data.pipeline import LmDataset
-from repro.runtime.quantized_params import quantize_params_for_serving, packed_bytes
 from repro.runtime.serve_loop import ServeSetup, generate
 from repro.runtime.train_loop import TrainSetup, train
 
@@ -33,32 +37,42 @@ CFG = ArchConfig(
 
 
 def main() -> None:
-    print("training a small LM on the synthetic stream ...")
+    steps = int(os.environ.get("SERVE_DEMO_STEPS", "150"))
+    print(f"training a small LM on the synthetic stream ({steps} steps) ...")
     out = train(
-        TrainSetup(cfg=CFG, mesh=None, lr_peak=3e-3, warmup=20, total_steps=150, remat=False),
-        steps=150,
+        TrainSetup(cfg=CFG, mesh=None, lr_peak=3e-3, warmup=20, total_steps=steps, remat=False),
+        steps=steps,
         batch_size=16,
         seq_len=64,
         log_every=50,
     )
     params = out["params"]
 
-    print("converting matmul weights to packed ELP_BSD (4b) ...")
-    qparams = quantize_params_for_serving(params, CFG, FORMAT_A)
-    raw = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))
-    enc = packed_bytes(qparams)
-    print(f"  weight bytes: {raw} -> {enc} ({raw / enc:.2f}x)")
+    print("converting matmul weights to packed ELP_BSD (4b) via repro.api ...")
+    qm = api.quantize(CFG, params, api.QuantScheme(fmt="elp4"))
+    r = qm.report
+    print(f"  weight bytes: {r.raw_bytes} -> {r.packed_bytes} ({r.compression:.2f}x)")
 
     ds = LmDataset(CFG, seq_len=32, batch=4, seed=9)
     prompts = {"tokens": jnp.asarray(ds.np_batch(0)["tokens"])}
-    setup = ServeSetup(cfg=CFG, mesh=None, max_len=64, batch=4)
 
+    setup = ServeSetup(cfg=CFG, mesh=None, max_len=64, batch=4)
     ref = generate(setup, params, prompts, max_new_tokens=16)
-    quant = generate(setup, qparams, prompts, max_new_tokens=16)
+    quant = qm.generate(prompts, max_new_tokens=16)
     agree = float(np.mean(np.asarray(ref) == np.asarray(quant)))
     print(f"  greedy tokens, fp32 vs ELP_BSD-4b: {agree * 100:.0f}% agreement")
     print("  fp32 :", np.asarray(ref[0])[:12])
     print("  elp4 :", np.asarray(quant[0])[:12])
+
+    print("save/load round-trip of the quantized artifact ...")
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "serve_demo_elp4")
+        qm.save(path)
+        quant2 = api.load(path).generate(prompts, max_new_tokens=16)
+        same = bool(np.array_equal(np.asarray(quant), np.asarray(quant2)))
+        print(f"  reloaded generate bit-identical: {same}")
+        if not same:
+            raise SystemExit("save/load round-trip drifted — artifact path broken")
 
 
 if __name__ == "__main__":

@@ -94,6 +94,16 @@ def invalidate_memory_cache() -> None:
     _loaded.clear()
 
 
+def cache_entries() -> dict[str, dict]:
+    """Read-only snapshot of the parsed autotune cache.
+
+    Keys are :func:`cache_key` strings (``backend|fmt|mode|MxKxN``).
+    Used by ``repro.api`` to record which tuned tilings apply to a
+    quantized artifact's weight shapes.
+    """
+    return dict(_read_cache(cache_path()))
+
+
 def lookup_blocks(
     m: int,
     k: int,

@@ -268,7 +268,7 @@ def _cnn_setup(spec_name: str, batch: int):
 
 
 def _run_cnn_fwd(spec_name, batch, variant, iters, warmup):
-    from repro.core.elp_bsd import PRESET_FORMATS
+    from repro import api
     from repro.models import cnn
 
     spec, params, x = _cnn_setup(spec_name, batch)
@@ -280,18 +280,8 @@ def _run_cnn_fwd(spec_name, batch, variant, iters, warmup):
         run_params = params
     else:
         float_logits = jax.jit(lambda p, a: cnn.forward(p, spec, a))(params, x)
-        qp = cnn.quantize_params(params, PRESET_FORMATS["elp_bsd_a4"])
-        run_params = qp
-        pw_bytes = cnn.packed_weight_bytes(qp)
-        f32_bytes = sum(
-            int(w.size) * 4 for k, w in params.items() if k.endswith("_w")
-        )
-        bytes_blk = {
-            "weight_bytes": pw_bytes,
-            "f32_bytes": f32_bytes,
-            "compression": round(f32_bytes / pw_bytes, 3),
-        }
         if variant == "packed":
+            qm = api.quantize(spec, params, api.QuantScheme(fmt="elp_bsd_a4"))
             # On TPU the packed forward drives the fused kernel with
             # autotuned blocks; on CPU impl="xla" ignores block_sizes
             # (interpret-mode pallas would swamp the e2e timing).
@@ -300,19 +290,35 @@ def _run_cnn_fwd(spec_name, batch, variant, iters, warmup):
                 lambda p, a: cnn.forward(p, spec, a, impl=impl, block_sizes="auto")
             )
         elif variant == "packed_dynamic_act":
+            qm = api.quantize(
+                spec, params, api.QuantScheme(fmt="elp_bsd_a4", act="dynamic", act_bits=8)
+            )
             fwd = jax.jit(lambda p, a: cnn.forward(p, spec, a, act_bits=8))
         elif variant == "packed_calib":
-            from repro.calib import calibrate_cnn
-
             rng = np.random.default_rng(5)
             images = jnp.asarray(
                 rng.normal(size=(4, batch, spec.input_hw, spec.input_hw, spec.input_ch)), F32
             )
-            table, folded = calibrate_cnn(params, spec, images, bits=8)
-            run_params = cnn.quantize_params(folded, PRESET_FORMATS["elp_bsd_a4"])
+            qm = api.quantize(
+                spec,
+                params,
+                api.QuantScheme(fmt="elp_bsd_a4", act="static", act_bits=8),
+                calib_data=images,
+            )
+            table = qm.table
             fwd = jax.jit(lambda p, a: cnn.forward(p, spec, a, calib=table))
         else:
             raise ValueError(f"unknown cnn_fwd variant {variant!r}")
+        run_params = qm.params
+        pw_bytes = qm.report.packed_weight_bytes
+        f32_bytes = sum(
+            int(w.size) * 4 for k, w in params.items() if k.endswith("_w")
+        )
+        bytes_blk = {
+            "weight_bytes": pw_bytes,
+            "f32_bytes": f32_bytes,
+            "compression": round(f32_bytes / pw_bytes, 3),
+        }
         quality["logits_mse"] = harness.output_mse(fwd(run_params, x), float_logits)
 
     wall = {"xla": harness.time_fn(lambda: fwd(run_params, x), iters=iters, warmup=warmup).to_json()}
@@ -332,17 +338,18 @@ def _run_cnn_fwd(spec_name, batch, variant, iters, warmup):
 
 
 def _run_lm_decode(arch, quant, batch, prompt_len, iters, warmup):
+    from repro import api as front
     from repro.configs import get_config
     from repro.data.pipeline import LmDataset
     from repro.models import get_model
-    from repro.runtime.quantized_params import packed_bytes, quantize_params_for_serving
+    from repro.runtime.quantized_params import packed_bytes
 
     cfg = get_config(arch).reduced()
     api = get_model(cfg)
     params = api.init_params(cfg, jax.random.PRNGKey(0))
     float_bytes = packed_bytes(params)
     if quant != "float":
-        params = quantize_params_for_serving(params, cfg, quant)
+        params = front.quantize(cfg, params, front.QuantScheme(fmt=quant)).params
     max_len = prompt_len + 8
 
     ds = LmDataset(cfg, seq_len=prompt_len, batch=batch, seed=7)

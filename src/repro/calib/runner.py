@@ -152,7 +152,7 @@ def calibrate_lm(
     not the growing residual stream) and the final pre-unembed
     activation. The serve path resolves each packed weight's static
     activation scale against these sites
-    (``quantized_params.quantize_params_for_serving``).
+    (``repro.api_schemes.pack_lm_params``).
     """
     from repro.models import transformer
 

@@ -9,11 +9,13 @@ from repro.core.elp_bsd import (
     DigitSpec,
     ElpBsdFormat,
     FORMAT_A,
+    FORMAT_ALIASES,
     FORMAT_B,
     FORMAT_C,
     FORMAT_D,
     PRESET_FORMATS,
     TABLE2_FORMATS,
+    resolve_format,
     decode_codes,
     encode_to_codes,
     pack_codes,
@@ -47,6 +49,12 @@ from repro.core.compensate import (
     mean_error_report,
 )
 from repro.core.energy import network_energy_nj, pdp_fj, pdp_reduction
-from repro.core.methodology import ConversionResult, convert, quantize_model
+from repro.core.methodology import (
+    ConversionResult,
+    convert,
+    find_critical_act_bits,
+    quantize_model,
+    run_methodology,
+)
 
 __all__ = [k for k in dir() if not k.startswith("_")]

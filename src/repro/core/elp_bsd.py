@@ -40,6 +40,8 @@ __all__ = [
     "FORMAT_D",
     "TABLE2_FORMATS",
     "PRESET_FORMATS",
+    "FORMAT_ALIASES",
+    "resolve_format",
 ]
 
 
@@ -216,6 +218,35 @@ FORMAT_D = ElpBsdFormat(
 
 TABLE2_FORMATS: tuple[ElpBsdFormat, ...] = (FORMAT_A, FORMAT_B, FORMAT_C, FORMAT_D)
 PRESET_FORMATS: dict[str, ElpBsdFormat] = {f.name: f for f in TABLE2_FORMATS}
+
+# Short serving-CLI tags accepted everywhere a format is named.
+FORMAT_ALIASES: dict[str, str] = {"elp4": "elp_bsd_a4", "elp8": "elp_bsd_c6"}
+
+
+def resolve_format(fmt: "ElpBsdFormat | str") -> ElpBsdFormat:
+    """Resolve a format spelled any supported way to an :class:`ElpBsdFormat`.
+
+    Accepts an ``ElpBsdFormat`` instance (returned as-is), a preset name
+    (``"elp_bsd_a4"`` ...), or a short tag alias (``"elp4"`` / ``"elp8"``).
+    This is THE boundary where string-typed format plumbing ends: every
+    public entry point resolves once through here, so unknown tags fail
+    immediately with the full list of valid spellings instead of a
+    ``KeyError`` deep inside a conversion.
+    """
+    if isinstance(fmt, ElpBsdFormat):
+        return fmt
+    if isinstance(fmt, str):
+        name = FORMAT_ALIASES.get(fmt, fmt)
+        try:
+            return PRESET_FORMATS[name]
+        except KeyError:
+            raise ValueError(
+                f"unknown ELP_BSD format {fmt!r}; expected one of "
+                f"{sorted(PRESET_FORMATS)} or an alias in {sorted(FORMAT_ALIASES)}"
+            ) from None
+    raise TypeError(
+        f"format must be an ElpBsdFormat or a preset/alias name, got {type(fmt).__name__}"
+    )
 
 
 def encode_to_codes(levels_idx: np.ndarray, fmt: ElpBsdFormat) -> np.ndarray:

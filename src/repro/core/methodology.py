@@ -18,10 +18,10 @@ replacements plus the encoded form for storage accounting.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Callable, Mapping, Sequence
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.compensate import compensate_tensor
@@ -104,7 +104,7 @@ def quantize_model(
     return out_w, out_q
 
 
-def convert(
+def run_methodology(
     weights: Mapping[str, Array],
     group_axes: Mapping[str, Sequence[int]],
     fmt: ElpBsdFormat,
@@ -115,13 +115,16 @@ def convert(
     bw_min: int = 4,
     compensate: bool = True,
     calib=None,
+    skip: Sequence[str] = (),
 ) -> ConversionResult:
-    """The full Sec. V methodology loop.
+    """The full Sec. V methodology loop (the engine behind ``repro.api``).
 
     ``calib`` switches step 1 (and the step-5 walk-back) to the
     calibrated static activation-quantization path: every evaluation
     runs the table at the candidate bit-width, so the chosen ``CBW_A``
-    is valid for the reduction-free serving graph.
+    is valid for the reduction-free serving graph. ``skip`` names
+    weights left at full precision (LM embeddings / heads / routers,
+    DESIGN.md §4).
     """
 
     def act_quant(bits: int):
@@ -132,7 +135,7 @@ def convert(
         eval_fn, weights, baseline_acc, ac, bw_max, bw_min, calib=calib
     )
 
-    qw, qt = quantize_model(weights, group_axes, fmt, compensate=compensate)
+    qw, qt = quantize_model(weights, group_axes, fmt, compensate=compensate, skip=skip)
     acc = eval_fn(qw, act_quant(cbw))
     # Step 5: walk activation precision back up while constraint violated.
     while baseline_acc - acc > ac and cbw < bw_max:
@@ -154,4 +157,41 @@ def convert(
         baseline_accuracy=baseline_acc,
         encoded_bytes=enc,
         raw_bytes=raw,
+    )
+
+
+def convert(
+    weights: Mapping[str, Array],
+    group_axes: Mapping[str, Sequence[int]],
+    fmt: ElpBsdFormat,
+    eval_fn: EvalFn,
+    *,
+    ac: float = 0.01,
+    bw_max: int = 8,
+    bw_min: int = 4,
+    compensate: bool = True,
+    calib=None,
+) -> ConversionResult:
+    """Deprecated name for :func:`run_methodology`.
+
+    Model-level callers should use :func:`repro.api.quantize`, which
+    drives this loop from a :class:`~repro.api.QuantScheme` and returns
+    a servable, serializable :class:`~repro.api.QuantizedModel`.
+    """
+    warnings.warn(
+        "repro.core.methodology.convert is deprecated; use repro.api.quantize "
+        "(or core.methodology.run_methodology for the raw Sec. V loop)",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    return run_methodology(
+        weights,
+        group_axes,
+        fmt,
+        eval_fn,
+        ac=ac,
+        bw_max=bw_max,
+        bw_min=bw_min,
+        compensate=compensate,
+        calib=calib,
     )

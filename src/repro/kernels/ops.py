@@ -66,7 +66,7 @@ class PackedWeight:
         set, ``quantized_matmul`` fake-quantizes ``x`` against the
         compile-time constant ``act_scale`` — no runtime ``max|x|``
         reduction in the decode graph. Set by
-        ``runtime.quantized_params.quantize_params_for_serving`` from a
+        ``repro.api_schemes.pack_lm_params`` from a
         :class:`~repro.calib.policy.CalibrationTable`.
     """
 
@@ -205,6 +205,25 @@ def pack_conv_weight(
     return pw, ct.values.astype(w.dtype)
 
 
+def packed_tree_bytes(tree, *, packed_only: bool = False) -> int:
+    """Weight-storage bytes of a (possibly partially) packed pytree.
+
+    The single packed-size accounting walk (``models/cnn`` and
+    ``runtime/quantized_params`` delegate here): a :class:`PackedWeight`
+    leaf costs its code buffer plus float32 scale factors; any other
+    leaf costs ``size * itemsize`` unless ``packed_only`` drops it from
+    the tally. Works on real arrays and on ``ShapeDtypeStruct`` trees
+    (the allocation-free dry-run path) alike.
+    """
+    total = 0
+    for leaf in jax.tree.leaves(tree, is_leaf=lambda x: isinstance(x, PackedWeight)):
+        if isinstance(leaf, PackedWeight):
+            total += leaf.nbytes + int(np.prod(leaf.sf.shape)) * 4
+        elif not packed_only:
+            total += int(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize
+    return total
+
+
 def dequantize(pw: PackedWeight) -> Array:
     """Decode a PackedWeight back to float32 ``[..., K, N]`` (XLA path)."""
     codes = kref.unpack_nibbles_k(pw.codes) if pw.nibble else pw.codes
@@ -216,6 +235,21 @@ def dequantize_nd(pw: PackedWeight) -> Array:
     """Decode to the source layout (conv ``[kh, kw, cin, cout]``, etc.)."""
     w = dequantize(pw)
     return w.reshape(pw.source_shape) if pw.source_shape is not None else w
+
+
+def dequantize_tree(tree):
+    """Decode every PackedWeight leaf back to float32 (source layouts).
+
+    The float twin of a packed tree: numerically exactly what the
+    packed execution paths compute from the stored codes, in a pytree
+    any float forward / eval_fn accepts. Non-packed leaves pass
+    through untouched.
+    """
+    return jax.tree_util.tree_map(
+        lambda l: dequantize_nd(l) if isinstance(l, PackedWeight) else l,
+        tree,
+        is_leaf=lambda l: isinstance(l, PackedWeight),
+    )
 
 
 def _pad_to(x: Array, axis: int, mult: int) -> Array:

@@ -19,7 +19,7 @@ from repro.configs import get_config
 from repro.data.pipeline import LmDataset
 from repro.models import get_model
 from repro.runtime.elastic import make_mesh
-from repro.runtime.quantized_params import packed_bytes, quantize_params_for_serving
+from repro.runtime.quantized_params import packed_bytes
 from repro.runtime.serve_loop import ServeSetup, generate
 
 
@@ -41,7 +41,9 @@ def main() -> None:
     mesh = make_mesh() if len(jax.devices()) > 1 else None
     params = api.init_params(cfg, jax.random.PRNGKey(0))
     if args.quant:
-        params = quantize_params_for_serving(params, cfg, args.quant)
+        from repro import api as front
+
+        params = front.quantize(cfg, params, front.QuantScheme(fmt=args.quant)).params
         print(f"quantized weights: {packed_bytes(params) / 1e6:.1f} MB")
 
     ds = LmDataset(cfg, seq_len=args.prompt_len, batch=args.batch, seed=7)

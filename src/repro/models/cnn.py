@@ -14,7 +14,7 @@ fc ``[in, out]`` (group = contracting rows).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Sequence
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -255,39 +255,36 @@ def quantize_params(
     granularity: str = "per_tensor",
     nibble: bool | None = None,
 ) -> dict[str, Array]:
-    """Pack every conv/fc weight as a :class:`PackedWeight` (Sec. V + Alg. 1).
+    """Deprecated wrapper: pack every conv/fc weight as a PackedWeight.
 
-    Biases stay in the model dtype (negligible bytes, accuracy-critical
-    — same policy as the LM serve path, DESIGN.md §4). The returned
-    pytree drops into :func:`forward`, which then runs end-to-end on
-    ELP_BSD codes.
+    Use :func:`repro.api.quantize` instead — it drives the same packing
+    walk (:func:`repro.api_schemes.pack_cnn_params`) from a
+    :class:`~repro.api_schemes.QuantScheme` and returns a servable,
+    serializable :class:`~repro.api.QuantizedModel`.
     """
-    from repro.kernels.ops import pack_conv_weight, pack_weight
+    import warnings
 
-    out: dict[str, Array] = {}
-    for name, w in params.items():
-        if name.endswith("_w") and w.ndim == 4:
-            out[name] = pack_conv_weight(
-                w, fmt, compensate=compensate, granularity=granularity, nibble=nibble
-            )[0]
-        elif name.endswith("_w") and w.ndim == 2:
-            out[name] = pack_weight(
-                w, fmt, compensate=compensate, granularity=granularity, nibble=nibble
-            )[0]
-        else:
-            out[name] = w
-    return out
+    warnings.warn(
+        "models.cnn.quantize_params is deprecated; use repro.api.quantize",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    from repro.api_schemes import pack_cnn_params
+
+    return pack_cnn_params(
+        params, fmt, compensate=compensate, granularity=granularity, nibble=nibble
+    )
 
 
 def packed_weight_bytes(params: dict[str, Array]) -> int:
-    """Code+sf bytes of the packed weights (compression accounting)."""
-    from repro.kernels.ops import PackedWeight
+    """Code+sf bytes of the packed weights (compression accounting).
 
-    total = 0
-    for w in params.values():
-        if isinstance(w, PackedWeight):
-            total += w.nbytes + w.sf.size * 4
-    return total
+    Delegates to :func:`repro.kernels.ops.packed_tree_bytes` — the one
+    packed-size accounting walk.
+    """
+    from repro.kernels.ops import packed_tree_bytes
+
+    return packed_tree_bytes(params, packed_only=True)
 
 
 def weight_group_axes(params: dict[str, Array]) -> dict[str, tuple[int, ...]]:

@@ -14,17 +14,23 @@ What gets encoded: every matmul weight that flows through
 depthwise convs, RG-LRU gate matrices, routers, norms and biases stay
 in the model dtype (they are a negligible byte fraction and/or
 accuracy-critical; DESIGN.md §4).
+
+The model-level entry point is :func:`repro.api.quantize`
+(:class:`~repro.api_schemes.LmAdapter` packs through
+:func:`repro.api_schemes.pack_lm_params`, which owns the tree walk);
+:func:`quantize_params_for_serving` remains as a deprecated wrapper.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.core.elp_bsd import ElpBsdFormat, PRESET_FORMATS
-from repro.kernels.ops import PackedWeight, pack_weight
+from repro.core.elp_bsd import ElpBsdFormat, resolve_format
+from repro.kernels.ops import PackedWeight, pack_weight, packed_tree_bytes
 
 Array = jax.Array
 F32 = jnp.float32
@@ -35,8 +41,6 @@ QUANTIZABLE = {
     "in_proj", "out_proj", "w_gate", "w_rec", "w_out", "frontend_proj",
     "we1", "we2", "we3",
 }
-
-FMT_BY_TAG = {"elp4": "elp_bsd_a4", "elp8": "elp_bsd_c6"}
 
 # Which calibration tap site measures each matmul leaf's *input*
 # (transformer.forward's collection sites, DESIGN.md §6). Leaves with
@@ -75,55 +79,46 @@ def quantize_params_for_serving(
     compensate: bool = True,
     calib=None,
 ) -> Any:
-    """Replace every quantizable matmul leaf with a PackedWeight.
+    """Deprecated wrapper: replace every quantizable matmul leaf with a
+    PackedWeight.
 
-    ``calib`` (a :class:`~repro.calib.policy.CalibrationTable`, e.g.
-    from ``calib.calibrate_lm``) additionally stamps each packed weight
-    with a *static* activation quantizer for its input: the leaf's own
-    site when the table carries one, else the site that measures that
-    matmul's input distribution (:data:`ACT_SITE_BY_LEAF` — post-norm
-    ``attn_in``/``ffn_in``, the ``attn_mix`` output mix, the
-    ``ffn_hidden`` intermediate). ``quantized_matmul`` then quantizes
-    activations against compile-time constants — the decode hot path
-    runs zero range reductions (DESIGN.md §6). Leaves without a
-    measured site are packed without activation quantization.
+    Use :func:`repro.api.quantize` instead — it drives the same packing
+    walk (:func:`repro.api_schemes.pack_lm_params`) from a
+    :class:`~repro.api_schemes.QuantScheme` and returns a servable,
+    serializable :class:`~repro.api.QuantizedModel`.
     """
-    import dataclasses
+    warnings.warn(
+        "runtime.quantized_params.quantize_params_for_serving is deprecated; "
+        "use repro.api.quantize",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    from repro.api_schemes import pack_lm_params
 
-    if isinstance(fmt, str):
-        fmt = PRESET_FORMATS[FMT_BY_TAG.get(fmt, fmt)]
-
-    def visit(path, leaf):
-        name = None
-        for e in reversed(path):
-            if hasattr(e, "key"):
-                name = str(e.key)
-                break
-        if name in QUANTIZABLE and leaf.ndim >= 2:
-            pw = quantize_stacked(leaf, fmt, compensate=compensate)
-            if calib is not None:
-                sc = calib.lookup(name, default=ACT_SITE_BY_LEAF.get(name))
-                if sc is not None:
-                    pw = dataclasses.replace(
-                        pw, act_scale=sc.amax, act_bits=sc.bits
-                    )
-            return pw
-        return leaf
-
-    return jax.tree_util.tree_map_with_path(visit, params)
+    return pack_lm_params(
+        params, cfg, resolve_format(fmt), compensate=compensate, calib=calib
+    )
 
 
-def abstract_quantize_tree(aparams: Any, cfg: ArchConfig, fmt_tag: str) -> Any:
-    """ShapeDtypeStruct tree of the quantized params (no allocation)."""
-    fmt = PRESET_FORMATS[FMT_BY_TAG.get(fmt_tag, fmt_tag)]
+def abstract_quantize_tree(aparams: Any, cfg: ArchConfig, fmt: ElpBsdFormat | str) -> Any:
+    """ShapeDtypeStruct tree of the quantized params (no allocation).
+
+    ``fmt`` is a real :class:`ElpBsdFormat` or any spelling
+    :func:`repro.core.elp_bsd.resolve_format` accepts; unknown tags
+    raise ``ValueError`` here, before any tracing happens.
+    """
+    from repro.api_schemes import pack_lm_params
+
+    fmt = resolve_format(fmt)
     return jax.eval_shape(
-        lambda p: quantize_params_for_serving(p, cfg, fmt, compensate=False), aparams
+        lambda p: pack_lm_params(p, cfg, fmt, compensate=False), aparams
     )
 
 
 def packed_bytes(params: Any) -> int:
-    """Total weight bytes of a (possibly partially) packed tree."""
-    total = 0
-    for leaf in jax.tree.leaves(params):
-        total += leaf.size * leaf.dtype.itemsize
-    return total
+    """Total weight bytes of a (possibly partially) packed tree.
+
+    Delegates to :func:`repro.kernels.ops.packed_tree_bytes` — the one
+    packed-size accounting walk.
+    """
+    return packed_tree_bytes(params)
