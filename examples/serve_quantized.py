@@ -1,11 +1,19 @@
-"""Serve a small LM with batched requests and ELP_BSD-encoded weights.
+"""Serve a small LM with continuous batching and ELP_BSD-encoded weights.
 
 Trains briefly, converts every matmul weight through the repro.api
 front door (the paper's Sec. V methodology with per-row compensation),
-then serves a batch of prompts through prefill + greedy decode via
-``QuantizedModel.generate``, comparing outputs and weight bytes against
-the unquantized model — including after a save/load round-trip of the
-quantized artifact.
+then serves through two paths and cross-checks them:
+
+  1. ``QuantizedModel.generate`` — a batch of same-length prompts,
+     compared against the unquantized model (token agreement + weight
+     bytes), including after a save/load round-trip of the artifact.
+  2. ``QuantizedModel.serve`` — the continuous-batching engine
+     (DESIGN.md §9) on a MIXED-length request trace: prompts of
+     different sizes share the slot cache with no padding, and each
+     request's output must be token-identical to its own per-request
+     static generation. On a multi-device host (e.g. CI's
+     ``XLA_FLAGS=--xla_force_host_platform_device_count=4``) the engine
+     stands up an elastic mesh and serves the packed tree sharded.
 
 Run:  PYTHONPATH=src:. python examples/serve_quantized.py
       SERVE_DEMO_STEPS=60 ... (smaller training budget, e.g. CI smoke)
@@ -13,14 +21,15 @@ Run:  PYTHONPATH=src:. python examples/serve_quantized.py
 import os
 import tempfile
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro import api
 from repro.configs.base import ArchConfig
 from repro.data.pipeline import LmDataset
-from repro.runtime.serve_loop import ServeSetup, generate
 from repro.runtime.train_loop import TrainSetup, train
+from repro.serve import ServeSetup, static_generate
 
 CFG = ArchConfig(
     name="serve-demo",
@@ -57,7 +66,7 @@ def main() -> None:
     prompts = {"tokens": jnp.asarray(ds.np_batch(0)["tokens"])}
 
     setup = ServeSetup(cfg=CFG, mesh=None, max_len=64, batch=4)
-    ref = generate(setup, params, prompts, max_new_tokens=16)
+    ref = static_generate(setup, params, prompts, max_new_tokens=16)
     quant = qm.generate(prompts, max_new_tokens=16)
     agree = float(np.mean(np.asarray(ref) == np.asarray(quant)))
     print(f"  greedy tokens, fp32 vs ELP_BSD-4b: {agree * 100:.0f}% agreement")
@@ -73,6 +82,24 @@ def main() -> None:
         print(f"  reloaded generate bit-identical: {same}")
         if not same:
             raise SystemExit("save/load round-trip drifted — artifact path broken")
+
+    print(f"continuous-batching engine on {jax.device_count()} device(s) ...")
+    base = np.asarray(prompts["tokens"])
+    reqs = [(base[0, :8], 12), (base[1, :16], 10), (base[2, :32], 8), (base[3, :8], 6)]
+    outs = qm.serve(reqs, n_slots=2, max_len=64)
+    ok = True
+    for i, ((prompt, n), got) in enumerate(zip(reqs, outs)):
+        s1 = ServeSetup(cfg=CFG, mesh=None, max_len=len(prompt) + n, batch=1)
+        want = np.asarray(
+            static_generate(s1, qm.params, {"tokens": jnp.asarray(prompt[None])}, n)
+        )[0]
+        match = bool(np.array_equal(got, want))
+        ok &= match
+        print(f"  req {i}: prompt[{len(prompt)}] +{n} tokens -> {got[:8]} (parity: {match})")
+    if not ok:
+        raise SystemExit(
+            "continuous-batching output drifted from per-request static generation"
+        )
 
 
 if __name__ == "__main__":

@@ -372,9 +372,38 @@ class QuantizedModel:
         return self.adapter.forward(self.params, x)
 
     def generate(self, batch, max_new_tokens: int, *, greedy: bool = True, key=None) -> Array:
-        """LM serving: greedy/sampled generation on the packed weights."""
+        """LM serving: greedy/sampled generation on the packed weights.
+
+        Greedy generation routes through the continuous-batching
+        :class:`~repro.serve.ServeEngine` (DESIGN.md §9); sampled
+        generation and non-transformer families keep the static
+        lockstep loop. Either way the decode step consumes the packed
+        leaves directly — codes enter the graph as uint8.
+        """
         return self.adapter.generate(
             self.params, batch, max_new_tokens, greedy=greedy, key=key
+        )
+
+    def serve(self, requests, *, n_slots: int = 4, max_len: int | None = None,
+              mesh="auto", flash_decode: bool = False) -> list:
+        """Continuous-batching LM serving on the packed weights.
+
+        ``requests`` is an iterable of ``(prompt_tokens, max_new_tokens)``
+        pairs — prompts may all have different lengths; nothing is padded
+        to a batch maximum. They are admitted into ``n_slots`` cache
+        slots of one :class:`~repro.serve.ServeEngine` (``mesh="auto"``
+        picks an elastic mesh when several devices are visible) and the
+        generated tokens come back as a list of int32 arrays in request
+        order. ``max_len`` is the per-slot cache capacity (default: the
+        largest ``len(prompt) + max_new`` over the requests).
+        """
+        return self.adapter.serve(
+            self.params,
+            requests,
+            n_slots=n_slots,
+            max_len=max_len,
+            mesh=mesh,
+            flash_decode=flash_decode,
         )
 
     # -- persistence --------------------------------------------------------

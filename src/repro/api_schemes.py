@@ -302,6 +302,8 @@ class ModelAdapter(Protocol):
 
     def generate(self, params: Any, batch: Any, max_new_tokens: int, **kw) -> Array: ...
 
+    def serve(self, params: Any, requests: Any, **kw) -> list: ...
+
     def model_json(self) -> dict: ...
 
 
@@ -389,6 +391,12 @@ class CnnAdapter:
         raise NotImplementedError(
             "CNN models classify — use QuantizedModel.forward(images); "
             "generate() is the LM serve path"
+        )
+
+    def serve(self, params, requests, **kw):
+        raise NotImplementedError(
+            "CNN models classify — use QuantizedModel.forward(images); "
+            "serve() is the LM continuous-batching path"
         )
 
     def model_json(self) -> dict:
@@ -555,17 +563,41 @@ class LmAdapter:
         greedy: bool = True,
         key: Array | None = None,
     ):
-        from repro.runtime.serve_loop import ServeSetup, generate
+        from repro.serve.engine import batch_generate
 
-        batch = self._batch(batch)
-        b, s = batch["tokens"].shape
-        setup = ServeSetup(
-            cfg=self.cfg,
-            mesh=None,
-            max_len=s + max_new_tokens + (self.cfg.frontend_tokens or 0),
-            batch=b,
+        return batch_generate(
+            self.cfg, params, self._batch(batch), max_new_tokens, greedy=greedy, key=key
         )
-        return generate(setup, params, batch, max_new_tokens, greedy=greedy, key=key)
+
+    def serve(
+        self,
+        params,
+        requests,
+        *,
+        n_slots: int = 4,
+        max_len: int | None = None,
+        mesh="auto",
+        flash_decode: bool = False,
+    ) -> list:
+        """Continuous-batching serving through :class:`repro.serve.ServeEngine`."""
+        import numpy as np
+
+        from repro.serve.engine import ServeEngine
+
+        reqs = [(np.asarray(t, np.int32).reshape(-1), int(n)) for t, n in requests]
+        if not reqs:
+            return []
+        if max_len is None:
+            max_len = max(t.size + n for t, n in reqs)
+        eng = ServeEngine(
+            self.cfg,
+            params,
+            n_slots=min(n_slots, len(reqs)),
+            max_len=max_len,
+            mesh=mesh,
+            flash_decode=flash_decode,
+        )
+        return eng.serve(reqs)
 
     def model_json(self) -> dict:
         doc = dataclasses.asdict(self.cfg)

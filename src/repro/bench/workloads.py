@@ -380,6 +380,126 @@ def _run_lm_decode(arch, quant, batch, prompt_len, iters, warmup):
     }
 
 
+def _serve_bench_cfg():
+    from repro.configs.base import ArchConfig
+
+    return ArchConfig(
+        name="serve_bench",
+        family="dense",
+        n_layers=2,
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=256,
+        vocab=256,
+        head_dim=32,
+        dtype_str="float32",
+    )
+
+
+def _serve_trace(n_requests: int):
+    """Deterministic mixed-length staggered trace: (prompt_len, max_new,
+    arrival_step) tuples cycling short/medium/long prompts with varied
+    generation budgets — the shape static padded batching is worst at."""
+    pattern = [(8, 24, 0), (32, 12, 0), (96, 8, 0), (8, 24, 1), (32, 8, 3), (8, 16, 5)]
+    out = []
+    for i in range(n_requests):
+        s, n, a = pattern[i % len(pattern)]
+        out.append((s, n, a + 6 * (i // len(pattern))))
+    return out
+
+
+def _run_serve_continuous(quant, n_slots, n_requests, iters, warmup):
+    from repro import api as front
+    from repro.models import get_model
+    from repro.runtime.quantized_params import packed_bytes
+    from repro.serve import ServeEngine, ServeSetup, build_serve_fns, static_generate
+
+    cfg = _serve_bench_cfg()
+    model = get_model(cfg)
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    float_bytes = packed_bytes(params)
+    if quant != "float":
+        params = front.quantize(cfg, params, front.QuantScheme(fmt=quant)).params
+
+    rng = np.random.default_rng(13)
+    trace = _serve_trace(n_requests)
+    reqs = [(rng.integers(0, cfg.vocab, size=s).astype(np.int32), n) for s, n, _ in trace]
+    arrivals = [a for _, _, a in trace]
+    max_len = 128
+    useful_tokens = sum(n for _, n in reqs)
+
+    engine = ServeEngine(cfg, params, n_slots=n_slots, max_len=max_len, mesh=None)
+    cont_fn = lambda: engine.serve(reqs, arrivals=arrivals)
+
+    # Static padded-batch baseline: requests grouped in arrival order,
+    # prompts padded to the group max, every row decoding the group's
+    # max max_new — the pre-engine cost model. The jitted step pair is
+    # built once per group shape (outside the timed fn, like any serve
+    # deployment would).
+    static_groups = []
+    for i in range(0, len(reqs), n_slots):
+        g = reqs[i : i + n_slots]
+        smax = max(t.size for t, _ in g)
+        nmax = max(n for _, n in g)
+        toks = np.zeros((len(g), smax), np.int32)
+        for r, (t, _) in enumerate(g):
+            toks[r, : t.size] = t
+        setup = ServeSetup(cfg=cfg, mesh=None, max_len=smax + nmax, batch=len(g))
+        pj, dj = build_serve_fns(setup, model, aparams=jax.eval_shape(lambda: params))
+        static_groups.append((setup, pj, dj, jnp.asarray(toks), nmax))
+
+    def static_fn():
+        tok = None
+        for setup, pj, dj, toks, nmax in static_groups:
+            cache = model.init_cache(cfg, toks.shape[0], setup.max_len)
+            logits, cache = pj(params, {"tokens": toks}, cache)
+            tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+            pos = toks.shape[1]
+            for i in range(nmax - 1):
+                logits, cache = dj(params, tok, cache, jnp.int32(pos + i))
+                tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        return tok
+
+    t_cont = harness.time_fn(cont_fn, iters=iters, warmup=warmup)
+    t_static = harness.time_fn(static_fn, iters=iters, warmup=warmup)
+
+    # Acceptance metric: continuous output token-identical to
+    # per-request (unpadded, exact-length) static generation.
+    outs = engine.serve(reqs, arrivals=arrivals)
+    matched = total = 0
+    for (prompt, n), out in zip(reqs, outs):
+        setup = ServeSetup(cfg=cfg, mesh=None, max_len=prompt.size + n, batch=1)
+        ref = np.asarray(
+            static_generate(setup, params, {"tokens": jnp.asarray(prompt[None])}, n)
+        )[0]
+        matched += int(np.sum(ref == out))
+        total += n
+    tok_s_cont = useful_tokens / (t_cont.min_us * 1e-6)
+    tok_s_static = useful_tokens / (t_static.min_us * 1e-6)
+
+    return {
+        "workload": "serve_continuous",
+        "shape": {
+            "arch": cfg.name,
+            "quant": quant,
+            "n_slots": n_slots,
+            "n_requests": n_requests,
+            "max_len": max_len,
+            "useful_tokens": useful_tokens,
+        },
+        "wall_us": {"continuous": t_cont.to_json(), "static": t_static.to_json()},
+        "hlo": engine.decode_cost(),
+        "quality": {
+            "tokens_per_s_continuous": round(tok_s_cont, 1),
+            "tokens_per_s_static": round(tok_s_static, 1),
+            "speedup_vs_static": round(tok_s_cont / tok_s_static, 3),
+            "token_match_frac": round(matched / total, 4),
+        },
+        "bytes": {"weight_bytes": packed_bytes(params), "float_bytes": float_bytes},
+    }
+
+
 def _register_e2e_suite() -> None:
     variants = ("float", "packed", "packed_dynamic_act", "packed_calib")
     for tier, spec_name, batch in (("smoke", "alexnet_mini", 8), ("full", "vgg_mini", 64)):
@@ -404,6 +524,22 @@ def _register_e2e_suite() -> None:
                     tags=("lm_decode", quant),
                 )
             )
+    # Continuous-batching engine vs the static padded-batch baseline on
+    # a mixed-length staggered request trace (DESIGN.md §9).
+    for tier, quant, n_slots, n_requests in (
+        ("smoke", "elp4", 4, 6),
+        ("full", "elp4", 4, 12),
+        ("full", "float", 4, 12),
+    ):
+        register(
+            WorkloadSpec(
+                name=f"serve_continuous/serve_bench/{quant}/s{n_slots}r{n_requests}",
+                suite="e2e",
+                tier=tier,
+                run=functools.partial(_run_serve_continuous, quant, n_slots, n_requests),
+                tags=("serve_continuous", quant),
+            )
+        )
 
 
 _register_kernel_suite()

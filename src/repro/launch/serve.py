@@ -1,15 +1,23 @@
 """Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
 
-Loads (or randomly initializes, for smoke runs) weights, optionally
-converts them to packed ELP_BSD (the paper's technique as a serving
-feature), and serves batched greedy generation through the pjit'd
-prefill/decode steps with the production cache sharding
-(``--flash-decode`` turns on the sequence-sharded flash-decoding
-layout from §Perf).
+Drives the continuous-batching engine (:mod:`repro.serve`, DESIGN.md
+§9): loads (or randomly initializes, for smoke runs) weights,
+optionally converts them to packed ELP_BSD through the ``repro.api``
+front door, stands up a :class:`~repro.serve.ServeEngine` on an elastic
+mesh (``runtime/elastic`` picks the largest divisibility-honoring mesh
+for the alive devices), and serves a mixed-length staggered request
+trace — no padding of short prompts, slots reused the step a request
+finishes. Prints per-request outputs, throughput, and the straggler
+monitor's slow-step report (``--flash-decode`` turns on the
+sequence-sharded flash-decoding cache layout from §Perf).
+
+Families outside the engine (recurrent / enc-dec / frontend archs) and
+``--static`` fall back to the lockstep static batch loop.
 """
 from __future__ import annotations
 
 import argparse
+import time
 
 import jax
 import jax.numpy as jnp
@@ -18,27 +26,40 @@ import numpy as np
 from repro.configs import get_config
 from repro.data.pipeline import LmDataset
 from repro.models import get_model
-from repro.runtime.elastic import make_mesh
 from repro.runtime.quantized_params import packed_bytes
-from repro.runtime.serve_loop import ServeSetup, generate
+from repro.serve import ENGINE_FAMILIES, ServeEngine, ServeSetup, static_generate
+
+
+def _trace(ds: LmDataset, prompt_len: int, n_requests: int, max_new: int):
+    """Deterministic mixed-length request trace with staggered arrivals."""
+    base = np.asarray(ds.np_batch(0)["tokens"])
+    lens = (max(prompt_len // 4, 4), max(prompt_len // 2, 8), prompt_len)
+    news = (max_new, max(max_new // 2, 4), max(max_new // 4, 2))
+    reqs, arrivals = [], []
+    for i in range(n_requests):
+        row = base[i % base.shape[0]]
+        reqs.append((row[: lens[i % 3]], news[i % 3]))
+        arrivals.append(i // 2)  # two arrivals per engine step
+    return reqs, arrivals
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--quant", default=None, choices=[None, "elp4", "elp8"])
     ap.add_argument("--flash-decode", action="store_true")
+    ap.add_argument("--static", action="store_true", help="legacy lockstep batch loop")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = cfg.reduced()
     api = get_model(cfg)
-    mesh = make_mesh() if len(jax.devices()) > 1 else None
     params = api.init_params(cfg, jax.random.PRNGKey(0))
     if args.quant:
         from repro import api as front
@@ -46,19 +67,52 @@ def main() -> None:
         params = front.quantize(cfg, params, front.QuantScheme(fmt=args.quant)).params
         print(f"quantized weights: {packed_bytes(params) / 1e6:.1f} MB")
 
-    ds = LmDataset(cfg, seq_len=args.prompt_len, batch=args.batch, seed=7)
-    npb = ds.np_batch(0)
-    batch = {k: jnp.asarray(v) for k, v in npb.items() if k != "labels"}
-    setup = ServeSetup(
-        cfg=cfg,
-        mesh=mesh,
-        max_len=args.prompt_len + args.max_new,
-        batch=args.batch,
+    ds = LmDataset(cfg, seq_len=args.prompt_len, batch=max(args.slots, 4), seed=7)
+    max_len = args.prompt_len + args.max_new
+
+    if args.static or cfg.family not in ENGINE_FAMILIES or cfg.frontend_tokens:
+        from repro.runtime.elastic import make_mesh
+
+        mesh = make_mesh() if len(jax.devices()) > 1 else None
+        npb = ds.np_batch(0)
+        batch = {k: jnp.asarray(v) for k, v in npb.items() if k != "labels"}
+        setup = ServeSetup(
+            cfg=cfg,
+            mesh=mesh,
+            max_len=max_len,
+            batch=batch["tokens"].shape[0],
+            flash_decode=args.flash_decode,
+            moe_impl="ep" if mesh is not None else "dense",
+        )
+        toks = static_generate(setup, params, batch, max_new_tokens=args.max_new)
+        print("generated (static batch):", np.asarray(toks)[:, :12])
+        return
+
+    engine = ServeEngine(
+        cfg,
+        params,
+        n_slots=args.slots,
+        max_len=max_len,
         flash_decode=args.flash_decode,
-        moe_impl="ep" if mesh is not None else "dense",
     )
-    toks = generate(setup, params, batch, max_new_tokens=args.max_new)
-    print("generated:", np.asarray(toks)[:, :12])
+    reqs, arrivals = _trace(ds, args.prompt_len, args.requests, args.max_new)
+    t0 = time.perf_counter()
+    outs = engine.serve(reqs, arrivals=arrivals)
+    dt = time.perf_counter() - t0
+
+    for i, ((prompt, _), out) in enumerate(zip(reqs, outs)):
+        print(f"req {i}: prompt[{len(prompt)}] -> {out[:12]}")
+    st = engine.stats()
+    print(
+        f"served {len(reqs)} requests / {st['tokens_generated']} tokens in {dt:.2f}s "
+        f"({st['tokens_generated'] / dt:.1f} tok/s; {st['decode_steps']} decode steps, "
+        f"{st['prefills']} prefills, mesh={st['mesh']})"
+    )
+    sr = st["straggler"]
+    print(
+        f"straggler report: {sr['straggle_events']} slow steps over {sr['steps']} "
+        f"(median {sr['median_s'] * 1e3:.1f} ms, worst x{sr['worst_ratio']:.2f})"
+    )
 
 
 if __name__ == "__main__":

@@ -37,11 +37,14 @@ F32 = jnp.float32
 
 def _local_attn(q, k, v, ks, vs, pos, *, axis: str, window: int, n_rep: int):
     """Per-shard body. q[B,1,H,hd]; k/v[B,s_loc,KV,hd] = this shard's
-    slice (optionally int8 with per-token-head scales ks/vs)."""
+    slice (optionally int8 with per-token-head scales ks/vs). ``pos`` is
+    a scalar (lockstep batch) or a per-row ``[B]`` vector (continuous
+    batching: each slot masked to its own depth)."""
     b, _, h, hd = q.shape
     s_loc = k.shape[1]
     idx = jax.lax.axis_index(axis)
     kpos = idx * s_loc + jnp.arange(s_loc)
+    pos = pos.reshape((-1, 1, 1))  # scalar -> [1,1,1]; [B] -> [B,1,1]
 
     kf = k.astype(F32) if ks is None else k.astype(F32) * ks
     vf = v.astype(F32) if vs is None else v.astype(F32) * vs
@@ -49,7 +52,7 @@ def _local_attn(q, k, v, ks, vs, pos, *, axis: str, window: int, n_rep: int):
     vf = jnp.repeat(vf, n_rep, axis=2)
     qf = q.astype(F32) * (1.0 / math.sqrt(hd))
     logits = jnp.einsum("bhd,bshd->bhs", qf[:, 0], kf)
-    mask = kpos[None, None, :] <= pos
+    mask = kpos[None, None, :] <= pos  # [B|1, 1, s_loc], broadcasts over H
     if window:
         mask &= (pos - kpos[None, None, :]) < window
     logits = jnp.where(mask, logits, -1e30)
@@ -96,12 +99,15 @@ def flash_decode_attention(
     qspec = P(bspec, None, None, None)
     cspec = P(bspec, axis, None, None)
     pos = jnp.asarray(pos, jnp.int32)
+    # a per-row [B] position vector shards with the batch; a scalar is
+    # replicated
+    pspec = P(bspec) if pos.ndim == 1 else P()
     if ks is not None:
         fn = partial(_local_attn, axis=axis, window=window, n_rep=n_rep)
         mapped = shard_map(
             fn,
             mesh=pctx.mesh,
-            in_specs=(qspec, cspec, cspec, cspec, cspec, P()),
+            in_specs=(qspec, cspec, cspec, cspec, cspec, pspec),
             out_specs=qspec,
             check_vma=False,
         )
@@ -113,7 +119,7 @@ def flash_decode_attention(
     mapped = shard_map(
         fn4,
         mesh=pctx.mesh,
-        in_specs=(qspec, cspec, cspec, P()),
+        in_specs=(qspec, cspec, cspec, pspec),
         out_specs=qspec,
         check_vma=False,
     )

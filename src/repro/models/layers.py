@@ -118,19 +118,27 @@ def attention_dot(
     window: int = 0,
     q_offset: int | Array = 0,
 ) -> Array:
-    """Plain O(S^2) attention. q[B,Sq,H,hd], k/v[B,Sk,H,hd]."""
+    """Plain O(S^2) attention. q[B,Sq,H,hd], k/v[B,Sk,H,hd].
+
+    ``q_offset`` positions the queries for causal/window masking: a
+    scalar offsets every row identically; a ``[B]`` vector gives each
+    row its own offset (continuous-batching decode, where every slot
+    sits at a different depth into its own cache).
+    """
     b, sq, h, hd = q.shape
     sk = k.shape[1]
     scale = 1.0 / math.sqrt(hd)
     logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(F32), k.astype(F32)) * scale
-    qpos = jnp.arange(sq) + q_offset
+    q_offset = jnp.asarray(q_offset)
+    # qpos: [sq] (shared offset) or [B, sq] (per-row offsets)
+    qpos = (q_offset[:, None] if q_offset.ndim == 1 else q_offset) + jnp.arange(sq)
     kpos = jnp.arange(sk)
-    mask = jnp.ones((sq, sk), bool)
+    mask = jnp.ones(qpos.shape + (sk,), bool)
     if causal:
-        mask &= qpos[:, None] >= kpos[None, :]
+        mask &= qpos[..., None] >= kpos
     if window:
-        mask &= qpos[:, None] - kpos[None, :] < window
-    logits = jnp.where(mask[None, None], logits, -1e30)
+        mask &= qpos[..., None] - kpos < window
+    logits = jnp.where(mask[:, None] if mask.ndim == 3 else mask[None, None], logits, -1e30)
     probs = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(F32))
     return out.astype(q.dtype)

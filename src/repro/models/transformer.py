@@ -163,10 +163,10 @@ def _attention(
         ck, cv, cks, cvs = kv_cache
         kq, ksf = _cache_q(k)
         vq, vsf = _cache_q(v)
-        ck = jax.lax.dynamic_update_slice(ck, kq, (0, cache_pos, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cv, vq, (0, cache_pos, 0, 0))
-        cks = jax.lax.dynamic_update_slice(cks, ksf, (0, cache_pos, 0, 0))
-        cvs = jax.lax.dynamic_update_slice(cvs, vsf, (0, cache_pos, 0, 0))
+        ck = _cache_set(ck, kq, cache_pos)
+        cv = _cache_set(cv, vq, cache_pos)
+        cks = _cache_set(cks, ksf, cache_pos)
+        cvs = _cache_set(cvs, vsf, cache_pos)
         new_cache = (ck, cv, cks, cvs)
         if s == 1 and pctx is not None and pctx.flash_decode:
             from repro.models.flash_decode import flash_decode_attention
@@ -179,8 +179,8 @@ def _attention(
         v = _cache_dq(cv, cvs, x.dtype)
     elif kv_cache is not None:
         ck, cv = kv_cache
-        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, cache_pos, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, cache_pos, 0, 0))
+        ck = _cache_set(ck, k, cache_pos)
+        cv = _cache_set(cv, v, cache_pos)
         k, v = ck, cv
         new_cache = (ck, cv)
 
@@ -463,6 +463,25 @@ def init_cache(
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
+def _cache_set(c: Array, u: Array, pos: Array) -> Array:
+    """Write ``u[B, s, ...]`` into cache ``c[B, S, ...]`` at ``pos``.
+
+    A scalar ``pos`` is the static-batch layout: one contiguous
+    ``dynamic_update_slice`` at the same offset for every row (prefill,
+    lockstep decode). A vector ``pos[B]`` is the continuous-batching
+    layout — one decode token per row, each at its OWN slot position
+    (``s`` must be 1) — written as a per-row scatter (row indices are
+    iota, so only row ``b`` changes, at ``pos[b]``; ~5x cheaper than a
+    one-hot select of the whole cache, and multi-device parity tests
+    pin that the SPMD partitioner handles it).
+    """
+    pos = jnp.asarray(pos)
+    u = u.astype(c.dtype)
+    if pos.ndim == 0:
+        return jax.lax.dynamic_update_slice(c, u, (0, pos) + (0,) * (c.ndim - 2))
+    return c.at[jnp.arange(c.shape[0]), pos].set(u[:, 0])
+
+
 def _cache_q(x: Array) -> tuple[Array, Array]:
     """Symmetric int8 quantization over head_dim: x[B,S,KV,hd]."""
     sf = jnp.max(jnp.abs(x.astype(F32)), axis=-1, keepdims=True) / 127.0 + 1e-12
@@ -507,7 +526,20 @@ def decode_step(
     *,
     pctx: ParallelCtx | None = None,
 ) -> tuple[Array, dict[str, Array]]:
-    """One decode step: token ``[B, 1]`` at position ``pos`` → logits."""
+    """One decode step: token ``[B, 1]`` at position ``pos`` → logits.
+
+    ``pos`` is a scalar (static batch: every row at the same position)
+    or a ``[B]`` vector of per-slot positions (continuous batching,
+    DESIGN.md §9): each row's KV is written at its own offset and its
+    attention masked to its own past.
+    """
+    pos = jnp.asarray(pos)
+    if pos.ndim == 0:
+        positions = pos[None, None]
+    elif pos.ndim == 1:
+        positions = pos[:, None]
+    else:
+        positions = pos
     x = params["embed"][token].astype(cfg.dtype)
     x, cache = stack_apply(
         params["blocks"],
@@ -515,7 +547,7 @@ def decode_step(
         x,
         causal=True,
         window=cfg.window,
-        positions=pos[None, None] if jnp.ndim(pos) == 0 else pos,
+        positions=positions,
         cache=cache,
         cache_pos=pos,
         pctx=pctx,

@@ -1,110 +1,47 @@
-"""Batched serving: prefill + decode loop with sharded KV cache.
+"""Deprecated static-batch serving entry points (see :mod:`repro.serve`).
 
-``make_serve_fns`` builds the two jitted entry points the dry-run and
-the serving example share:
+The serving engine moved to :mod:`repro.serve` (DESIGN.md §9): a
+slot-based continuous-batching :class:`~repro.serve.engine.ServeEngine`
+over a persistent sharded KV cache, consuming packed ELP_BSD weight
+trees directly in the jitted decode step. This module keeps the PR-4
+style deprecation surface:
 
-  * ``prefill(params, batch, cache)``  — prompt pass, fills the cache;
-  * ``decode(params, token, cache, pos)`` — one token for the whole
-    batch against the cache.
-
-``generate`` drives them greedily (temperature optional) with a simple
-static-batch scheduler; requests shorter than the batch are padded —
-the continuous-batching upgrade path is slot reuse in the same cache
-layout, noted in DESIGN.md.
-
-Weights can be served ELP_BSD-encoded: pass ``quantize_fmt`` to convert
-matmul weights at load time (Sec. V methodology); the decode step then
-dequantizes in-graph — HBM traffic drops by the encoding ratio, which
-is the paper's energy win in TPU terms (§Perf measures it).
+  * :class:`ServeSetup` is re-exported unchanged (it is the engine's
+    own configuration object now);
+  * :func:`make_serve_fns` warns and delegates to
+    :func:`repro.serve.engine.build_serve_fns`;
+  * :func:`generate` warns and serves through the engine (greedy,
+    engine-supported families) or the static lockstep loop
+    (:func:`repro.serve.engine.static_generate`) for everything else —
+    bit-exact with calling those entry points directly (parity-tested).
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable
+import warnings
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs.base import ArchConfig
-from repro.models import ModelApi, get_model
-from repro.models.context import ParallelCtx
-from repro.runtime import sharding as shr
+from repro.models import ModelApi
+from repro.serve.engine import ServeSetup, batch_generate, build_serve_fns
 
 Array = jax.Array
 
-
-@dataclasses.dataclass(frozen=True)
-class ServeSetup:
-    cfg: ArchConfig
-    mesh: Mesh | None
-    max_len: int
-    batch: int
-    moe_impl: str = "ep"
-    flash_decode: bool = False
-
-    def pctx(self) -> ParallelCtx | None:
-        if self.mesh is None:
-            return None
-        return ParallelCtx(
-            mesh=self.mesh,
-            batch_axes=shr.batch_axes(self.mesh),
-            model_axis="model",
-            moe_impl=self.moe_impl,
-            flash_decode=self.flash_decode,
-        )
+__all__ = ["ServeSetup", "make_serve_fns", "generate"]
 
 
 def make_serve_fns(setup: ServeSetup, api: ModelApi | None = None):
-    api = api or get_model(setup.cfg)
-    cfg = setup.cfg
-    pctx = setup.pctx()
+    """Deprecated wrapper: build the jitted (prefill, decode) pair.
 
-    def prefill_fn(params, batch, cache):
-        return api.prefill(params, cfg, batch, cache, pctx=pctx)
-
-    def decode_fn(params, token, cache, pos):
-        return api.decode_step(params, cfg, token, cache, pos, pctx=pctx)
-
-    if setup.mesh is None:
-        return jax.jit(prefill_fn), jax.jit(decode_fn)
-
-    mesh = setup.mesh
-    aparams = jax.eval_shape(lambda: api.init_params(cfg, jax.random.PRNGKey(0)))
-    pspecs = shr.param_specs(aparams, mesh)
-    acache = jax.eval_shape(lambda: api.init_cache(cfg, setup.batch, setup.max_len))
-    cspecs = shr.cache_specs_tree(acache, mesh)
-    tok_spec = shr.input_spec((setup.batch, 1), mesh)
-
-    prefill_j = jax.jit(
-        prefill_fn,
-        in_shardings=(shr.named(mesh, pspecs), None, shr.named(mesh, cspecs)),
-        out_shardings=(NamedSharding(mesh, P()), _cache_out(api, cfg, mesh, cspecs)),
-        donate_argnums=(2,),
-    )
-    decode_j = jax.jit(
-        decode_fn,
-        in_shardings=(
-            shr.named(mesh, pspecs),
-            NamedSharding(mesh, tok_spec),
-            shr.named(mesh, cspecs),
-            None,
-        ),
-        out_shardings=(NamedSharding(mesh, P()), _cache_out(api, cfg, mesh, cspecs)),
-        donate_argnums=(2,),
-    )
-    return prefill_j, decode_j
-
-
-def _cache_out(api, cfg, mesh, cspecs):
-    """Cache out-sharding matches in-sharding (donated round trip).
-
-    For enc-dec archs the serve state is (cache, enc_out) — enc_out gets
-    batch sharding.
+    Use :func:`repro.serve.build_serve_fns` (same contract; the decode
+    step now also accepts a per-slot ``[B]`` position vector).
     """
-    if cfg.family in ("encdec", "audio"):
-        return (shr.named(mesh, cspecs), NamedSharding(mesh, P(shr.batch_axes(mesh))))
-    return shr.named(mesh, cspecs)
+    warnings.warn(
+        "runtime.serve_loop.make_serve_fns is deprecated; use "
+        "repro.serve.build_serve_fns",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    return build_serve_fns(setup, api)
 
 
 def generate(
@@ -116,26 +53,30 @@ def generate(
     greedy: bool = True,
     key: Array | None = None,
 ) -> Array:
-    """Greedy/sampled generation for a static batch of prompts."""
-    api = get_model(setup.cfg)
-    prefill_j, decode_j = make_serve_fns(setup, api)
-    cache = api.init_cache(setup.cfg, setup.batch, setup.max_len)
-    logits, cache = prefill_j(params, batch, cache)
-    pos = batch["tokens"].shape[1] + (
-        batch["frontend"].shape[1] if setup.cfg.family == "vlm" and "frontend" in batch else 0
+    """Deprecated wrapper: greedy/sampled generation for a batch of prompts.
+
+    Use :class:`repro.serve.ServeEngine` (continuous batching) or
+    :func:`repro.serve.static_generate` (lockstep batch) directly.
+    Greedy generation for engine-supported families routes through the
+    engine; sampled generation and the recurrent/enc-dec/frontend
+    families keep the static loop, preserving the legacy whole-batch
+    PRNG-stream semantics exactly.
+    """
+    warnings.warn(
+        "runtime.serve_loop.generate is deprecated; use repro.serve.ServeEngine "
+        "(continuous batching) or repro.serve.static_generate",
+        DeprecationWarning,
+        stacklevel=2,
     )
-    out = []
-    tok = _pick(logits, greedy, key, 0)
-    out.append(tok)
-    for i in range(max_new_tokens - 1):
-        logits, cache = decode_j(params, tok, cache, jnp.int32(pos + i))
-        tok = _pick(logits, greedy, key, i + 1)
-        out.append(tok)
-    return jnp.concatenate(out, axis=1)
-
-
-def _pick(logits: Array, greedy: bool, key: Array | None, i: int) -> Array:
-    if greedy or key is None:
-        return jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-    k = jax.random.fold_in(key, i)
-    return jax.random.categorical(k, logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    return batch_generate(
+        setup.cfg,
+        params,
+        batch,
+        max_new_tokens,
+        mesh=setup.mesh,
+        max_len=setup.max_len,
+        greedy=greedy,
+        key=key,
+        flash_decode=setup.flash_decode,
+        moe_impl=setup.moe_impl,
+    )

@@ -37,7 +37,20 @@ _REPL = {"ln", "ln1", "ln2", "ln_x", "final_norm", "enc_norm", "gnorm", "conv_b"
          "A_log", "D", "dt_bias", "ba", "bx", "lam", "qnorm", "knorm"}
 
 
-def _leaf_name(path) -> str:
+# PackedWeight aux-array leaves: scale factors (and any stamped
+# activation-scale arrays) ride next to the codes under the weight's
+# name. Their sharding follows the WEIGHT's rule applied to their own
+# (keepdims-broadcastable) shape — see _scale_spec.
+_SCALE_LEAVES = {"sf", "scale", "act_scale"}
+
+
+def _leaf_name(path) -> tuple[str, str | None]:
+    """(leaf name, owning-weight name for PackedWeight aux leaves).
+
+    ``codes`` inherits the weight's own name outright (the code array
+    mirrors the weight layout); scale leaves keep their name plus the
+    parent so :func:`_scale_spec` can pick the matching rule.
+    """
     names = []
     for entry in path:
         if hasattr(entry, "key"):
@@ -45,15 +58,12 @@ def _leaf_name(path) -> str:
         elif hasattr(entry, "name"):
             names.append(str(entry.name))
     if not names:
-        return ""
-    # PackedWeight leaves: "codes" follows the weight's own name and
-    # inherits its rule (the code array mirrors the weight layout);
-    # "sf" is tiny and replicated.
+        return "", None
     if names[-1] == "codes" and len(names) >= 2:
-        return names[-2]
-    if names[-1] == "sf":
-        return "sf"
-    return names[-1]
+        return names[-2], None
+    if names[-1] in _SCALE_LEAVES:
+        return names[-1], names[-2] if len(names) >= 2 else None
+    return names[-1], None
 
 
 def _try(shape: tuple[int, ...], dim: int, axis: str, size: int) -> P | None:
@@ -66,11 +76,42 @@ def _try(shape: tuple[int, ...], dim: int, axis: str, size: int) -> P | None:
     return None
 
 
+def _scale_spec(
+    parent: str | None, shape: tuple[int, ...], mesh: Mesh, model_axis: str
+) -> P:
+    """Spec for a PackedWeight scale leaf (``sf`` / ``act_scale``).
+
+    Per-channel scales are keepdims-shaped ``[..., 1, N]`` against the
+    weight's ``[..., K, N]``: when the weight is column-parallel (out
+    dim sharded over model), the scales shard the SAME out dim — each
+    shard's codes dequantize against exactly its own scale columns, no
+    replication, no gather. Expert stacks shard the expert dim with the
+    weight. Everything else (per-tensor/per-slice size-1 dims,
+    row-parallel weights whose shards each need every out-channel
+    scale) replicates — the size-1 dims fail the divisibility test
+    naturally, so a per-slice ``[..., 1, 1]`` falls through to ``P()``.
+    """
+    msize = mesh.shape[model_axis]
+    if parent in _EXPERT and len(shape) >= 3:
+        s = _try(shape, len(shape) - 3, model_axis, msize)
+        if s is not None:
+            return s
+    if parent in _COL or parent in _VOCAB:
+        s = _try(shape, -1, model_axis, msize)
+        if s is not None:
+            return s
+    return P()
+
+
 def param_spec(path, shape: tuple[int, ...], mesh: Mesh, model_axis: str = "model") -> P:
     """Baseline tensor-parallel spec for one parameter."""
-    name = _leaf_name(path)
+    name, scale_parent = _leaf_name(path)
+    if len(shape) == 0 or min(shape) == 0:
+        return P()
+    if name in _SCALE_LEAVES:
+        return _scale_spec(scale_parent, shape, mesh, model_axis)
     msize = mesh.shape[model_axis]
-    if name in _REPL or name == "sf" or len(shape) == 0 or min(shape) == 0:
+    if name in _REPL:
         return P()
     if name in _VOCAB:
         # embed [V, D] / lm_head [D, V]: prefer the vocab dim

@@ -1,0 +1,38 @@
+"""Continuous-batching serving engine (DESIGN.md §9).
+
+Public surface:
+
+  * :class:`~repro.serve.engine.ServeEngine` — slot-based continuous
+    batching over a persistent sharded KV cache, consuming packed
+    (ELP_BSD) or float weight trees.
+  * :func:`~repro.serve.engine.static_generate` — the lockstep
+    static-batch loop, kept as the parity/benchmark baseline and the
+    path for families the engine does not drive.
+  * :func:`~repro.serve.engine.build_serve_fns` /
+    :func:`~repro.serve.engine.build_slot_prefill` — the jitted step
+    builders (whole-batch prefill+decode, per-slot admission prefill).
+"""
+from repro.serve.engine import (
+    ENGINE_FAMILIES,
+    ServeEngine,
+    ServeSetup,
+    batch_generate,
+    build_greedy_decode,
+    build_serve_fns,
+    build_slot_prefill,
+    static_generate,
+)
+from repro.serve.scheduler import Request, SlotScheduler
+
+__all__ = [
+    "ENGINE_FAMILIES",
+    "Request",
+    "ServeEngine",
+    "ServeSetup",
+    "SlotScheduler",
+    "batch_generate",
+    "build_greedy_decode",
+    "build_serve_fns",
+    "build_slot_prefill",
+    "static_generate",
+]

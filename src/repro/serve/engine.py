@@ -1,0 +1,654 @@
+"""Continuous-batching serving engine on sharded packed weights.
+
+One engine (DESIGN.md §9) replaces the old split between
+``runtime/serve_loop.py`` (static padded batches), ``launch/serve.py``'s
+ad-hoc driver, and ``QuantizedModel.generate``: requests are admitted
+into SLOTS of one persistent sharded KV cache, each slot tracks its own
+position, and a single jitted decode step advances every live slot at
+once. A finished request's slot is immediately reusable — no
+re-prefill of live slots, no padding of short prompts to the batch
+maximum.
+
+Correctness invariants (tested in ``tests/test_serve_engine.py``):
+
+  * **slot isolation** — decode-step cache writes are per-row
+    (``models/transformer._cache_set`` with a vector position): slot
+    ``b`` writes only row ``b`` of the cache, at its own position;
+  * **mask-past-pos** — attention reads ``kpos <= pos[slot]``, so a
+    reused slot's stale entries from the previous occupant are never
+    attended: every position ``<= pos`` has been written by the current
+    request (prefill covers ``[0, S)``, each decode writes its own
+    position before attending to it);
+  * **token parity** — greedy continuous output is token-identical to
+    per-request static generation: per-row math is independent of what
+    the other slots are doing, masked positions contribute exactly zero
+    to the softmax, and the admission prefill runs at the request's
+    exact prompt length.
+
+Weights: a packed tree (``PackedWeight`` leaves) is consumed directly by
+the jitted decode step — codes enter the graph as uint8 and decode
+inside the ELP_BSD matmul path (the fused Pallas kernel on single-device
+TPU, the XLA-fused dequant under pjit), so HBM moves code bytes, never a
+materialized full-precision weight tree. Sharding: ``codes`` follow the
+weight's own rule and per-channel ``sf`` follows the sharded out-dim
+(``runtime/sharding.py``), so the packed tree drops onto the mesh the
+float tree would use.
+
+Startup wires ``runtime/elastic``: with ``mesh="auto"`` the engine picks
+the largest divisibility-honoring mesh for the alive devices
+(:func:`repro.runtime.elastic.make_mesh`) and lays the weights out with
+:func:`repro.runtime.elastic.reshard`. Each decode step's wall-clock
+feeds a :class:`repro.runtime.straggler.StragglerMonitor`;
+``stats()["straggler"]`` surfaces the slow-step report.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import ModelApi, get_model
+from repro.models.context import ParallelCtx
+from repro.runtime import sharding as shr
+from repro.runtime.straggler import StragglerMonitor
+from repro.serve.scheduler import Request, SlotScheduler
+
+Array = jax.Array
+
+# Families the slot engine drives. The engine needs the transformer
+# cache contract ([L, B, S, KV, hd] dicts, positional RoPE) and a
+# token-only prompt; recurrent/enc-dec families — and vlm/audio
+# requests carrying frontend embeddings — keep the static path
+# (:func:`static_generate`).
+ENGINE_FAMILIES = ("dense", "moe", "vlm")
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeSetup:
+    """Static serving configuration (mesh, cache geometry, layout knobs)."""
+
+    cfg: ArchConfig
+    mesh: Mesh | None
+    max_len: int
+    batch: int
+    moe_impl: str = "ep"
+    flash_decode: bool = False
+
+    def pctx(self) -> ParallelCtx | None:
+        if self.mesh is None:
+            return None
+        return ParallelCtx(
+            mesh=self.mesh,
+            batch_axes=shr.batch_axes(self.mesh),
+            model_axis="model",
+            moe_impl=self.moe_impl,
+            flash_decode=self.flash_decode,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Jitted step builders
+# ---------------------------------------------------------------------------
+def _abstract_params(setup: ServeSetup, api: ModelApi, aparams):
+    """Abstract tree the shardings are derived from.
+
+    ``aparams=None`` falls back to the float init tree — callers serving
+    a PACKED tree must pass its own abstract shape (the packed pytree
+    has a different structure, and its specs come from the
+    PackedWeight-aware rules in ``runtime/sharding.py``)."""
+    if aparams is not None:
+        return aparams
+    return jax.eval_shape(lambda: api.init_params(setup.cfg, jax.random.PRNGKey(0)))
+
+
+def build_serve_fns(setup: ServeSetup, api: ModelApi | None = None, aparams: Any = None):
+    """Jitted (prefill, decode) pair for a whole-batch serving step.
+
+    ``prefill(params, batch, cache)`` fills the cache with the prompt;
+    ``decode(params, token, cache, pos)`` advances one token — ``pos``
+    may be a scalar (static lockstep batch) or a ``[batch]`` vector of
+    per-slot positions (continuous batching).
+    """
+    api = api or get_model(setup.cfg)
+    cfg = setup.cfg
+    pctx = setup.pctx()
+
+    def prefill_fn(params, batch, cache):
+        return api.prefill(params, cfg, batch, cache, pctx=pctx)
+
+    def decode_fn(params, token, cache, pos):
+        return api.decode_step(params, cfg, token, cache, pos, pctx=pctx)
+
+    if setup.mesh is None:
+        return jax.jit(prefill_fn), jax.jit(decode_fn)
+
+    mesh = setup.mesh
+    ap = _abstract_params(setup, api, aparams)
+    pspecs = shr.param_specs(ap, mesh)
+    acache = jax.eval_shape(lambda: api.init_cache(cfg, setup.batch, setup.max_len))
+    cspecs = shr.cache_specs_tree(acache, mesh, prefer_seq=setup.flash_decode)
+    tok_spec = shr.input_spec((setup.batch, 1), mesh)
+
+    prefill_j = jax.jit(
+        prefill_fn,
+        in_shardings=(shr.named(mesh, pspecs), None, shr.named(mesh, cspecs)),
+        out_shardings=(NamedSharding(mesh, P()), _cache_out(api, cfg, mesh, cspecs)),
+        donate_argnums=(2,),
+    )
+    decode_j = jax.jit(
+        decode_fn,
+        in_shardings=(
+            shr.named(mesh, pspecs),
+            NamedSharding(mesh, tok_spec),
+            shr.named(mesh, cspecs),
+            None,
+        ),
+        out_shardings=(NamedSharding(mesh, P()), _cache_out(api, cfg, mesh, cspecs)),
+        donate_argnums=(2,),
+    )
+    return prefill_j, decode_j
+
+
+def _cache_out(api, cfg, mesh, cspecs):
+    """Cache out-sharding matches in-sharding (donated round trip).
+
+    For enc-dec archs the serve state is (cache, enc_out) — enc_out gets
+    batch sharding.
+    """
+    if cfg.family in ("encdec", "audio"):
+        return (shr.named(mesh, cspecs), NamedSharding(mesh, P(shr.batch_axes(mesh))))
+    return shr.named(mesh, cspecs)
+
+
+def build_slot_prefill(setup: ServeSetup, api: ModelApi | None = None, aparams: Any = None):
+    """Jitted admission step: prefill ONE request into ONE cache slot.
+
+    ``prefill_slot(params, tokens[1, S], cache, slot)`` runs the prompt
+    pass on a batch-1 view of the slot's cache row and writes the filled
+    row back — the other slots' cache state is untouched, so admission
+    never re-prefills live requests. Returns the prompt's last-position
+    logits ``[1, V]`` and the updated cache. One compilation per
+    distinct prompt length (``slot`` is traced).
+    """
+    api = api or get_model(setup.cfg)
+    cfg = setup.cfg
+    pctx = setup.pctx()
+
+    def prefill_slot(params, tokens, cache, slot):
+        row = jax.tree.map(lambda c: jax.lax.dynamic_slice_in_dim(c, slot, 1, axis=1), cache)
+        logits, row = api.prefill(params, cfg, {"tokens": tokens}, row, pctx=pctx)
+        cache = jax.tree.map(
+            lambda c, r: jax.lax.dynamic_update_slice_in_dim(c, r.astype(c.dtype), slot, axis=1),
+            cache,
+            row,
+        )
+        return logits[:, -1], cache
+
+    if setup.mesh is None:
+        return jax.jit(prefill_slot)
+    mesh = setup.mesh
+    ap = _abstract_params(setup, api, aparams)
+    pspecs = shr.param_specs(ap, mesh)
+    acache = jax.eval_shape(lambda: api.init_cache(cfg, setup.batch, setup.max_len))
+    cspecs = shr.cache_specs_tree(acache, mesh, prefer_seq=setup.flash_decode)
+    return jax.jit(
+        prefill_slot,
+        in_shardings=(shr.named(mesh, pspecs), None, shr.named(mesh, cspecs), None),
+        out_shardings=(NamedSharding(mesh, P()), shr.named(mesh, cspecs)),
+        donate_argnums=(2,),
+    )
+
+
+def build_greedy_decode(setup: ServeSetup, api: ModelApi | None = None, aparams: Any = None):
+    """Jitted decode step fused with greedy token selection.
+
+    ``decode_greedy(params, token, cache, pos) -> (next_token, cache)``
+    — argmax runs inside the jit, so the engine's greedy loop never has
+    to fetch a logits tensor to the host: steps chain device-resident
+    and the dispatch pipeline stays full (2-3x higher tokens/sec than
+    a per-step sync on small models).
+    """
+    api = api or get_model(setup.cfg)
+    cfg = setup.cfg
+    pctx = setup.pctx()
+
+    def decode_greedy(params, token, cache, pos):
+        logits, cache = api.decode_step(params, cfg, token, cache, pos, pctx=pctx)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return nxt, cache
+
+    if setup.mesh is None:
+        return jax.jit(decode_greedy)
+    mesh = setup.mesh
+    ap = _abstract_params(setup, api, aparams)
+    pspecs = shr.param_specs(ap, mesh)
+    acache = jax.eval_shape(lambda: api.init_cache(cfg, setup.batch, setup.max_len))
+    cspecs = shr.cache_specs_tree(acache, mesh, prefer_seq=setup.flash_decode)
+    tok_spec = shr.input_spec((setup.batch, 1), mesh)
+    return jax.jit(
+        decode_greedy,
+        in_shardings=(
+            shr.named(mesh, pspecs),
+            NamedSharding(mesh, tok_spec),
+            shr.named(mesh, cspecs),
+            None,
+        ),
+        out_shardings=(NamedSharding(mesh, tok_spec), _cache_out(api, cfg, mesh, cspecs)),
+        donate_argnums=(2,),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Static reference path (the pre-engine loop, kept as baseline + fallback)
+# ---------------------------------------------------------------------------
+def static_generate(
+    setup: ServeSetup,
+    params,
+    batch: dict[str, Array],
+    max_new_tokens: int,
+    *,
+    greedy: bool = True,
+    key: Array | None = None,
+) -> Array:
+    """Greedy/sampled generation for a static (lockstep) batch of prompts.
+
+    The pre-engine serving loop: one whole-batch prefill, then
+    ``max_new_tokens`` lockstep decode steps — every row pays for the
+    longest request. Kept (un-deprecated) as (a) the per-request
+    reference the engine's token-parity tests and the
+    ``serve_continuous`` benchmark baseline compare against, (b) the
+    path for families/options the slot engine does not cover
+    (recurrent/enc-dec/frontend archs, legacy whole-batch sampling).
+    """
+    api = get_model(setup.cfg)
+    prefill_j, decode_j = build_serve_fns(setup, api, aparams=jax.eval_shape(lambda: params))
+    cache = api.init_cache(setup.cfg, setup.batch, setup.max_len)
+    logits, cache = prefill_j(params, batch, cache)
+    pos = batch["tokens"].shape[1] + (
+        batch["frontend"].shape[1] if setup.cfg.family == "vlm" and "frontend" in batch else 0
+    )
+    out = []
+    tok = _pick(logits, greedy, key, 0)
+    out.append(tok)
+    for i in range(max_new_tokens - 1):
+        logits, cache = decode_j(params, tok, cache, jnp.int32(pos + i))
+        tok = _pick(logits, greedy, key, i + 1)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)
+
+
+def _pick(logits: Array, greedy: bool, key: Array | None, i: int) -> Array:
+    if greedy or key is None:
+        return jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    k = jax.random.fold_in(key, i)
+    return jax.random.categorical(k, logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+
+
+def batch_generate(
+    cfg: ArchConfig,
+    params,
+    batch: dict[str, Array],
+    max_new_tokens: int,
+    *,
+    mesh: Mesh | None = None,
+    max_len: int | None = None,
+    greedy: bool = True,
+    key: Array | None = None,
+    flash_decode: bool = False,
+    moe_impl: str | None = None,
+) -> Array:
+    """Generate for a batch of same-length prompts — the one routing
+    point between the engine and the static loop.
+
+    Greedy, keyless, engine-supported, token-only calls go through
+    :class:`ServeEngine` (one slot per row); sampled generation (which
+    keeps the legacy whole-batch PRNG stream), frontend batches, and
+    recurrent/enc-dec families take :func:`static_generate`. Both
+    ``QuantizedModel.generate`` and the deprecated
+    ``runtime.serve_loop.generate`` delegate here, so engine
+    eligibility lives in exactly one place.
+    """
+    b, s = batch["tokens"].shape
+    if max_len is None:
+        max_len = s + max_new_tokens + (cfg.frontend_tokens or 0)
+    if (
+        greedy
+        and key is None
+        and cfg.family in ENGINE_FAMILIES
+        and not cfg.frontend_tokens
+        and "frontend" not in batch
+    ):
+        eng = ServeEngine(
+            cfg,
+            params,
+            n_slots=b,
+            max_len=max_len,
+            mesh=mesh,
+            flash_decode=flash_decode,
+            moe_impl=moe_impl,
+        )
+        outs = eng.serve([(batch["tokens"][i], max_new_tokens) for i in range(b)])
+        return jnp.asarray(np.stack(outs))
+    setup = ServeSetup(
+        cfg=cfg,
+        mesh=mesh,
+        max_len=max_len,
+        batch=b,
+        flash_decode=flash_decode,
+        moe_impl=moe_impl or ("ep" if mesh is not None else "dense"),
+    )
+    return static_generate(setup, params, batch, max_new_tokens, greedy=greedy, key=key)
+
+
+# ---------------------------------------------------------------------------
+# The engine
+# ---------------------------------------------------------------------------
+class ServeEngine:
+    """Slot-based continuous-batching server for decoder LMs.
+
+    Args:
+      cfg: the architecture (``dense``/``moe`` families; recurrent,
+        enc-dec and frontend archs raise — use :func:`static_generate`).
+      params: float or packed parameter pytree. Packed trees are
+        consumed as-is: the decode step's weight operands are uint8
+        ELP_BSD codes.
+      n_slots: concurrent requests = batch rows of the persistent cache.
+      max_len: per-slot cache capacity (prompt + generated); a request
+        reaching it is finished early and flagged ``truncated``.
+      mesh: ``"auto"`` (elastic mesh over the alive devices when more
+        than one is visible), an explicit ``Mesh``, or ``None``.
+      flash_decode: sequence-sharded flash-decoding cache layout (§Perf).
+      monitor: a :class:`StragglerMonitor` (one is created by default);
+        every decode step's wall-clock is recorded.
+    """
+
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        params: Any,
+        *,
+        n_slots: int = 4,
+        max_len: int = 512,
+        mesh: Mesh | str | None = "auto",
+        target_model: int = 16,
+        flash_decode: bool = False,
+        moe_impl: str | None = None,
+        monitor: StragglerMonitor | None = None,
+    ):
+        if cfg.family not in ENGINE_FAMILIES:
+            raise ValueError(
+                f"ServeEngine drives the transformer cache contract "
+                f"(families {ENGINE_FAMILIES}); {cfg.family!r} archs serve through "
+                "repro.serve.static_generate"
+            )
+        if cfg.frontend_tokens:
+            raise ValueError(
+                "ServeEngine requests are token-only; frontend (vlm/audio) prompts "
+                "serve through repro.serve.static_generate"
+            )
+        if mesh == "auto":
+            from repro.runtime.elastic import make_mesh
+
+            mesh = make_mesh(target_model=target_model) if len(jax.devices()) > 1 else None
+        self.cfg = cfg
+        self.mesh = mesh
+        self.setup = ServeSetup(
+            cfg=cfg,
+            mesh=mesh,
+            max_len=max_len,
+            batch=n_slots,
+            moe_impl=moe_impl or ("ep" if mesh is not None else "dense"),
+            flash_decode=flash_decode,
+        )
+        self._api = get_model(cfg)
+        aparams = jax.eval_shape(lambda: params)
+        if mesh is not None:
+            from repro.runtime.elastic import reshard
+
+            self.pspecs = shr.param_specs(aparams, mesh)
+            params = reshard(params, mesh, self.pspecs)
+        self.params = params
+        self._prefill = build_slot_prefill(self.setup, self._api, aparams=aparams)
+        _, self._decode = build_serve_fns(self.setup, self._api, aparams=aparams)
+        self._decode_greedy = build_greedy_decode(self.setup, self._api, aparams=aparams)
+        cache = self._api.init_cache(cfg, n_slots, max_len)
+        if mesh is not None:
+            cspecs = shr.cache_specs_tree(
+                jax.eval_shape(lambda: cache), mesh, prefer_seq=flash_decode
+            )
+            cache = jax.device_put(cache, shr.named(mesh, cspecs))
+        self._cache = cache
+        self.monitor = monitor or StragglerMonitor()
+        self._sched = SlotScheduler(n_slots)
+        self._requests: dict[int, Request] = {}
+        self._next_rid = 0
+        # per-slot state: next cache write position (host — the
+        # scheduler needs it synchronously) and the last generated token
+        # (device-resident [n_slots, 1]: the greedy loop chains it from
+        # step to step without ever fetching it)
+        self._pos = np.zeros(n_slots, np.int32)
+        self._tok_dev = jnp.zeros((n_slots, 1), jnp.int32)
+        self.steps = 0
+        self._decode_steps = 0
+        self._prefills = 0
+        self._tokens_generated = 0
+        self._completed = 0
+        self._truncated = 0
+
+    # -- request lifecycle ---------------------------------------------------
+    def submit(self, tokens, max_new_tokens: int, *, key=None) -> int:
+        """Queue one request; returns its id (results via :meth:`result`)."""
+        prompt = np.asarray(tokens, np.int32).reshape(-1)
+        if prompt.size == 0:
+            raise ValueError("empty prompt")
+        if max_new_tokens < 1:
+            raise ValueError(f"max_new_tokens must be >= 1, got {max_new_tokens}")
+        if prompt.size > self.setup.max_len:
+            raise ValueError(
+                f"prompt of {prompt.size} tokens exceeds the engine's per-slot "
+                f"cache capacity max_len={self.setup.max_len}"
+            )
+        rid = self._next_rid
+        self._next_rid += 1
+        req = Request(rid=rid, prompt=prompt, max_new_tokens=int(max_new_tokens), key=key)
+        self._requests[rid] = req
+        self._sched.submit(req)
+        return rid
+
+    def evict(self, rid: int) -> np.ndarray:
+        """Cancel a live/queued request, freeing its slot immediately.
+
+        Returns the tokens generated so far. The slot needs no cleanup:
+        the next occupant's prefill overwrites ``[0, S)`` and the
+        mask-past-pos contract hides everything beyond its own writes.
+        """
+        req = self._requests[rid]
+        if req.done:
+            return req.tokens()
+        if req.slot is not None:
+            slot = req.slot
+            self._sched.finish(slot)
+            self._pos[slot] = 0
+        else:
+            self._sched.cancel(req)
+        req.truncated = True
+        self._truncated += 1
+        return req.tokens()
+
+    def result(self, rid: int) -> np.ndarray:
+        return self._requests[rid].tokens()
+
+    def release(self, rid: int) -> np.ndarray:
+        """Fetch a request's tokens AND retire its bookkeeping.
+
+        :meth:`serve` releases every request it created, so a
+        long-running engine does not accumulate one ``Request`` per
+        served prompt; ``submit``/``result`` users call this (or keep
+        using ``result`` and accept the growth)."""
+        return self._requests.pop(rid).tokens()
+
+    # -- stepping ------------------------------------------------------------
+    def step(self) -> bool:
+        """Admit queued requests into free slots, then run one decode step
+        for every live slot. Returns whether any work happened.
+
+        Greedy-only steps stay device-resident: selection runs inside
+        the jitted step, requests log lazy ``(token_vector, slot)``
+        entries, and nothing blocks on the device — the dispatch
+        pipeline stays full. A step with any sampled (keyed) request
+        falls back to fetching logits.
+        """
+        progressed = False
+        for slot, req in self._sched.ready():
+            logits, self._cache = self._prefill(
+                self.params, jnp.asarray(req.prompt[None]), self._cache, jnp.int32(slot)
+            )
+            self._prefills += 1
+            if req.key is None:
+                first = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # [1], device
+                req.out.append((first, 0))
+                self._tok_dev = self._tok_dev.at[slot, 0].set(first[0])
+            else:
+                tok = self._select(req, np.asarray(logits)[0])
+                req.out.append(tok)
+                self._tok_dev = self._tok_dev.at[slot, 0].set(tok)
+            self._tokens_generated += 1
+            self._pos[slot] = req.prompt.size
+            self._maybe_finish(slot, req)
+            progressed = True
+
+        live = self._sched.live
+        if live:
+            # hand the dispatch its OWN copy of the position vector:
+            # jnp.asarray can zero-copy-alias a host numpy buffer on
+            # CPU, and self._pos is mutated in place below while the
+            # (async) decode may not have read it yet
+            pos = jnp.asarray(np.array(self._pos))
+            t0 = time.perf_counter()
+            if all(r.key is None for r in live.values()):
+                nxt, self._cache = self._decode_greedy(
+                    self.params, self._tok_dev, self._cache, pos
+                )
+                self._tok_dev = nxt
+                # dispatch-clocked: once the device queue back-pressures,
+                # dispatch wall-clock tracks true step time
+                self.monitor.record(time.perf_counter() - t0)
+                for slot, req in list(live.items()):
+                    req.out.append((nxt, slot))
+                    self._tokens_generated += 1
+                    self._pos[slot] += 1
+                    self._maybe_finish(slot, req)
+            else:
+                logits, self._cache = self._decode(
+                    self.params, self._tok_dev, self._cache, pos
+                )
+                logits = np.asarray(jax.block_until_ready(logits))
+                self.monitor.record(time.perf_counter() - t0)
+                toks = np.zeros(self._sched.n_slots, np.int32)
+                for slot, req in list(live.items()):
+                    tok = self._select(req, logits[slot, -1])
+                    req.out.append(tok)
+                    toks[slot] = tok
+                    self._tokens_generated += 1
+                    self._pos[slot] += 1
+                    self._maybe_finish(slot, req)
+                self._tok_dev = jnp.asarray(toks[:, None])
+            self._decode_steps += 1
+            progressed = True
+        self.steps += 1
+        return progressed
+
+    def run(self) -> None:
+        """Drive :meth:`step` until queue and slots are empty."""
+        while self._sched.busy:
+            self.step()
+
+    def serve(
+        self, requests: Sequence[tuple], *, arrivals: Sequence[int] | None = None
+    ) -> list[np.ndarray]:
+        """Serve ``[(prompt_tokens, max_new_tokens), ...]`` to completion.
+
+        ``arrivals`` (optional, non-decreasing) holds per-request arrival
+        times in engine steps relative to this call — requests are
+        submitted once that many steps have run (the mixed-length
+        staggered-trace shape the benchmark drives); an idle engine
+        fast-forwards to the next arrival. Returns generated tokens in
+        request order.
+        """
+        reqs = list(requests)
+        if arrivals is None:
+            rids = [self.submit(t, n) for t, n in reqs]
+            self.run()
+            return [self.release(r) for r in rids]
+        arrivals = list(arrivals)
+        if len(arrivals) != len(reqs):
+            raise ValueError(
+                f"arrivals has {len(arrivals)} entries for {len(reqs)} requests"
+            )
+        if arrivals != sorted(arrivals):
+            raise ValueError("arrivals must be non-decreasing (FIFO trace)")
+        rids: list[int | None] = [None] * len(reqs)
+        start = self.steps
+        i = 0
+        while i < len(reqs) or self._sched.busy:
+            while i < len(reqs) and (
+                self.steps - start >= arrivals[i] or not self._sched.busy
+            ):
+                rids[i] = self.submit(*reqs[i])
+                i += 1
+            self.step()
+        return [self.release(r) for r in rids]
+
+    # -- introspection -------------------------------------------------------
+    def stats(self) -> dict:
+        """Serving counters + the straggler monitor's slow-step report."""
+        return {
+            "steps": self.steps,
+            "decode_steps": self._decode_steps,
+            "prefills": self._prefills,
+            "tokens_generated": self._tokens_generated,
+            "requests_completed": self._completed,
+            "requests_truncated": self._truncated,
+            "live_slots": len(self._sched.live),
+            "n_slots": self._sched.n_slots,
+            "mesh": dict(self.mesh.shape) if self.mesh is not None else None,
+            "straggler": self.monitor.report(),
+        }
+
+    def decode_cost(self) -> dict:
+        """HLO cost (FLOPs / bytes / collectives) of the compiled greedy
+        decode step — the graph the continuous loop actually runs, and
+        the evidence that packed serving moves code bytes, not a
+        dequantized weight tree."""
+        from repro.launch.hlo_stats import compiled_cost
+
+        lowered = self._decode_greedy.lower(
+            self.params,
+            jnp.zeros((self._sched.n_slots, 1), jnp.int32),
+            jax.eval_shape(lambda: self._cache),
+            jnp.asarray(np.array(self._pos)),
+        )
+        return compiled_cost(lowered.compile())
+
+    # -- internals -----------------------------------------------------------
+    def _select(self, req: Request, logits_row: np.ndarray) -> int:
+        if req.key is None:
+            return int(np.argmax(logits_row))
+        k = jax.random.fold_in(req.key, len(req.out))
+        return int(jax.random.categorical(k, jnp.asarray(logits_row)))
+
+    def _maybe_finish(self, slot: int, req: Request) -> None:
+        full = self._pos[slot] >= self.setup.max_len
+        if req.remaining <= 0 or full:
+            if full and req.remaining > 0:
+                req.truncated = True
+                self._truncated += 1
+            self._sched.finish(slot)
+            self._completed += 1
+            self._pos[slot] = 0

@@ -1,0 +1,107 @@
+"""Slot scheduler for the continuous-batching engine (DESIGN.md §9).
+
+Pure host-side bookkeeping, deliberately free of jax: the engine owns
+the device state (params, cache, jitted steps) and asks the scheduler
+two questions per step — "which queued requests go into which free
+slots now?" and "which slots are live?". Keeping the policy here makes
+it unit-testable and swappable (FIFO today; priority/deadline policies
+drop in behind the same three calls).
+
+Invariants the engine relies on:
+  * a slot is in exactly one of {free, live} at any time;
+  * ``finish(slot)`` makes the slot reusable IMMEDIATELY — the next
+    ``ready()`` may hand it out again in the same engine step (cache
+    hygiene is the engine's mask-past-pos contract, not the
+    scheduler's);
+  * admission order is deterministic: FIFO over requests, lowest free
+    slot first — two runs of the same trace produce the same
+    (slot, request) assignments, which is what makes served outputs
+    reproducible and benchable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Iterator
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request and its accumulated output.
+
+    ``out`` entries are ints (sampled path) or lazy ``(vector, row)``
+    pairs — a device token vector from one greedy decode/prefill step
+    plus this request's row in it. Laziness is what keeps the greedy
+    decode loop device-resident (no per-step host sync); entries are
+    resolved to ints on the first :meth:`tokens` call.
+    """
+
+    rid: int
+    prompt: np.ndarray  # [S] int32 prompt tokens
+    max_new_tokens: int
+    key: Any = None  # optional jax PRNG key: sampled decoding (None = greedy)
+    out: list = dataclasses.field(default_factory=list)
+    slot: int | None = None
+    done: bool = False
+    truncated: bool = False
+
+    @property
+    def remaining(self) -> int:
+        return self.max_new_tokens - len(self.out)
+
+    def tokens(self) -> np.ndarray:
+        resolved = [
+            int(np.asarray(e[0]).reshape(-1)[e[1]]) if isinstance(e, tuple) else int(e)
+            for e in self.out
+        ]
+        self.out = resolved
+        return np.asarray(resolved, np.int32)
+
+
+class SlotScheduler:
+    """FIFO admission over a fixed pool of cache slots."""
+
+    def __init__(self, n_slots: int):
+        if n_slots < 1:
+            raise ValueError(f"need at least one slot, got {n_slots}")
+        self.n_slots = n_slots
+        self._free: list[int] = sorted(range(n_slots), reverse=True)  # pop() -> lowest
+        self._queue: deque[Request] = deque()
+        self.live: dict[int, Request] = {}
+
+    @property
+    def busy(self) -> bool:
+        """Anything queued or in flight?"""
+        return bool(self._queue) or bool(self.live)
+
+    @property
+    def queued(self) -> int:
+        return len(self._queue)
+
+    def submit(self, req: Request) -> None:
+        self._queue.append(req)
+
+    def ready(self) -> Iterator[tuple[int, Request]]:
+        """Admit queued requests into free slots (lowest slot first)."""
+        while self._queue and self._free:
+            slot = self._free.pop()
+            req = self._queue.popleft()
+            req.slot = slot
+            self.live[slot] = req
+            yield slot, req
+
+    def finish(self, slot: int) -> Request:
+        """Retire the slot's request; the slot is immediately reusable."""
+        req = self.live.pop(slot)
+        req.done = True
+        req.slot = None
+        self._free.append(slot)
+        self._free.sort(reverse=True)
+        return req
+
+    def cancel(self, req: Request) -> None:
+        """Drop a still-queued (never admitted) request."""
+        self._queue.remove(req)
+        req.done = True

@@ -62,6 +62,65 @@ def test_packed_weight_codes_inherit_parent_rule():
     assert shr.param_spec(path_sf, (36, 1, 1), MESH) == P()
 
 
+def _aux(weight, leaf, shape, mesh=MESH):
+    path = (jax.tree_util.DictKey(weight), jax.tree_util.GetAttrKey(leaf))
+    return shr.param_spec(path, shape, mesh)
+
+
+def test_per_channel_scales_follow_sharded_out_dim():
+    # column-parallel weight: codes shard N, per-channel sf shards the
+    # SAME N — each shard dequantizes against its own scale columns
+    assert _aux("wq", "sf", (36, 1, 4096)) == P(None, None, "model")
+    assert _aux("w1", "sf", (1, 11008)) == P(None, "model")
+    assert _aux("w1", "act_scale", (1, 11008)) == P(None, "model")
+    # per-slice / per-tensor scales have no shardable extent
+    assert _aux("w1", "sf", (36, 1, 1)) == P()
+    # non-divisible out-dim: weight falls back, so do the scales
+    assert _aux("wq", "sf", (1, 30)) == P()
+
+
+def test_row_parallel_scales_replicate():
+    # wo/w2 shard the contracting dim; every shard needs ALL out-channel
+    # scales, so per-channel sf must NOT shard (the old rule's silent
+    # replication was accidentally right here — now it is deliberate)
+    assert _aux("wo", "sf", (1, 6144)) == P()
+    assert _aux("w2", "sf", (36, 1, 4096)) == P()
+
+
+def test_expert_scales_follow_expert_dim():
+    # codes [L, E, K, N] shard E; per-slice sf [L, E, 1, 1] follows
+    assert _aux("we1", "sf", (61, 384, 1, 1)) == P(None, "model", None, None)
+    assert _aux("we2", "sf", (61, 384, 1, 1)) == P(None, "model", None, None)
+
+
+def test_packed_tree_specs_align_codes_and_scales():
+    """Spec-tree check on a real packed pytree: every PackedWeight's sf
+    spec is consistent with its codes spec (no axis used by sf that the
+    codes do not shard on the matching dim family)."""
+    from repro.kernels.ops import PackedWeight, pack_weight
+    from repro.core.elp_bsd import FORMAT_A
+
+    def build():
+        w_col = jax.random.normal(jax.random.PRNGKey(0), (4, 64, 128))
+        w_row = jax.random.normal(jax.random.PRNGKey(1), (4, 128, 64))
+        return {
+            "blocks": {
+                "wq": pack_weight(w_col, FORMAT_A, granularity="per_channel")[0],
+                "w1": pack_weight(w_col, FORMAT_A, granularity="per_slice")[0],
+                "wo": pack_weight(w_row, FORMAT_A, granularity="per_channel")[0],
+            }
+        }
+
+    atree = jax.eval_shape(build)
+    mesh = FakeMesh({"data": 2, "model": 4})
+    specs = shr.param_specs(atree, mesh)
+    b = specs["blocks"]
+    assert b["wq"].codes == P(None, None, "model") and b["wq"].sf == P(None, None, "model")
+    assert b["w1"].codes == P(None, None, "model") and b["w1"].sf == P()  # per-slice
+    assert b["wo"].codes == P(None, "model", None) and b["wo"].sf == P()  # row-parallel
+    assert isinstance(atree["blocks"]["wq"], PackedWeight)
+
+
 def test_non_divisible_falls_back_to_replication():
     # 56-head q proj output 7168 divides; a deliberately odd dim doesn't
     assert _spec("wq", (10, 30, 30)) == P()
