@@ -15,9 +15,19 @@ then serves through two paths and cross-checks them:
      ``XLA_FLAGS=--xla_force_host_platform_device_count=4``) the engine
      stands up an elastic mesh and serves the packed tree sharded.
 
-Run:  PYTHONPATH=src:. python examples/serve_quantized.py
+``--speculative`` switches the serve leg to the self-speculative
+draft/verify engine (DESIGN.md §10): the artifact is built with
+``QuantScheme.speculative`` (elp4 draft tier + float verify tier) and
+both drafters — the elp4 model drafter and the token-recycling ngram
+table — are served against the same trace. Every request must stay
+token-identical to its own static generation on the verify tier; any
+drift is a hard failure (non-zero exit), which is how CI's
+examples-smoke gate consumes this script on 4 fake devices.
+
+Run:  PYTHONPATH=src:. python examples/serve_quantized.py [--speculative]
       SERVE_DEMO_STEPS=60 ... (smaller training budget, e.g. CI smoke)
 """
+import argparse
 import os
 import tempfile
 
@@ -45,7 +55,53 @@ CFG = ArchConfig(
 )
 
 
+def speculative_main(params) -> None:
+    """--speculative: draft/verify serving, hard-failing on any drift."""
+    ds = LmDataset(CFG, seq_len=32, batch=4, seed=9)
+    base = np.asarray(ds.np_batch(0)["tokens"])
+    reqs = [(base[0, :8], 12), (base[1, :16], 10), (base[2, :32], 8), (base[3, :8], 6)]
+
+    refs = []
+    for prompt, n in reqs:
+        s1 = ServeSetup(cfg=CFG, mesh=None, max_len=len(prompt) + n, batch=1)
+        refs.append(
+            np.asarray(
+                static_generate(s1, params, {"tokens": jnp.asarray(prompt[None])}, n)
+            )[0]
+        )
+
+    for drafter in ("model", "ngram"):
+        scheme = api.QuantScheme.speculative(draft="elp4", K=5, drafter=drafter)
+        qm = api.quantize(CFG, params, scheme)
+        print(
+            f"speculative serving ({drafter} drafter, K={scheme.spec_k}) on "
+            f"{jax.device_count()} device(s) ..."
+        )
+        outs = qm.serve(reqs, n_slots=2, max_len=64)
+        ok = True
+        for i, (got, want) in enumerate(zip(outs, refs)):
+            match = bool(np.array_equal(np.asarray(got), want))
+            ok &= match
+            print(
+                f"  req {i}: +{len(want)} tokens -> {np.asarray(got)[:8]} "
+                f"(identity: {match})"
+            )
+        if not ok:
+            raise SystemExit(
+                f"speculative serving ({drafter} drafter) is NOT token-identical "
+                "to static generation on the verify tier"
+            )
+    print("speculative serving token-identical for both drafters")
+
+
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--speculative",
+        action="store_true",
+        help="serve draft/verify rounds (both drafters) and hard-fail on drift",
+    )
+    args = ap.parse_args()
     steps = int(os.environ.get("SERVE_DEMO_STEPS", "150"))
     print(f"training a small LM on the synthetic stream ({steps} steps) ...")
     out = train(
@@ -56,6 +112,10 @@ def main() -> None:
         log_every=50,
     )
     params = out["params"]
+
+    if args.speculative:
+        speculative_main(params)
+        return
 
     print("converting matmul weights to packed ELP_BSD (4b) via repro.api ...")
     qm = api.quantize(CFG, params, api.QuantScheme(fmt="elp4"))

@@ -73,6 +73,7 @@ ARTIFACT_VERSION = 1
 _MANIFEST = "manifest.json"
 _CALIB = "calib.json"
 _PARAMS_DIR = "params"
+_VERIFY_DIR = "verify_params"
 
 
 class ArtifactError(ValueError):
@@ -224,6 +225,27 @@ def quantize(
 
     packed = adapter.pack(work, scheme, table)
 
+    # speculative schemes pack a SECOND tier of the same checkpoint: the
+    # verify tier ("float" = the calibrated float tree itself) that the
+    # serve engine uses to check the low-bit draft's tokens. Report and
+    # byte accounting below stay about the draft artifact — that is the
+    # paper's product; the verify tier is a serving accelerant's safety
+    # net (DESIGN.md §10).
+    verify_params = None
+    if scheme.spec_k:
+        if adapter.kind != "lm":
+            raise ValueError(
+                "speculative schemes (spec_verify/spec_k) are an LM serving "
+                "feature; CNN models classify in one forward"
+            )
+        if scheme.spec_verify == "float":
+            verify_params = work
+        else:
+            vscheme = dataclasses.replace(
+                scheme, fmt=scheme.spec_verify, spec_verify=None, spec_k=0
+            )
+            verify_params = adapter.pack(work, vscheme, table)
+
     baseline_acc: float | None = None
     accuracy: float | None = None
     act_bits = scheme.resolved_act_bits()
@@ -282,7 +304,9 @@ def quantize(
         energy_nj=energy,
         tuned_blocks=_tuned_blocks_for(packed) if scheme.block_sizes == "auto" else (),
     )
-    return QuantizedModel(packed, adapter, scheme, table=table, report=report)
+    return QuantizedModel(
+        packed, adapter, scheme, table=table, report=report, verify_params=verify_params
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -292,10 +316,17 @@ class QuantizedModel:
     """The artifact of a conversion: packed params + everything needed
     to serve and reproduce them.
 
-    A registered pytree: the packed params are the children, the
-    adapter / scheme / table / report ride as hashable aux data — so a
-    QuantizedModel passes through ``jax.jit``, ``jax.device_put``, and
-    shard annotations whole.
+    A registered pytree: the packed params (plus the optional
+    speculative verify tier) are the children, the adapter / scheme /
+    table / report ride as hashable aux data — so a QuantizedModel
+    passes through ``jax.jit``, ``jax.device_put``, and shard
+    annotations whole.
+
+    ``verify_params`` (speculative schemes only) is the second tier of
+    the same checkpoint — ``"float"`` or a wider ELP packing — that
+    verifies the draft tier's tokens at serve time and *defines* the
+    generated output (DESIGN.md §10). ``forward`` keeps running the
+    draft tier: that is the artifact the conversion report describes.
     """
 
     def __init__(
@@ -306,12 +337,14 @@ class QuantizedModel:
         *,
         table: CalibrationTable | None = None,
         report: ConversionReport | None = None,
+        verify_params: Any = None,
     ):
         self.params = params
         self.adapter = adapter
         self.scheme = scheme
         self.table = table
         self.report = report
+        self.verify_params = verify_params
 
     @property
     def model(self):
@@ -321,7 +354,10 @@ class QuantizedModel:
     # -- pytree -------------------------------------------------------------
     def tree_flatten_with_keys(self):
         ga = jax.tree_util.GetAttrKey
-        return ((ga("params"), self.params),), (
+        return (
+            (ga("params"), self.params),
+            (ga("verify_params"), self.verify_params),
+        ), (
             self.adapter,
             self.scheme,
             self.table,
@@ -329,12 +365,20 @@ class QuantizedModel:
         )
 
     def tree_flatten(self):
-        return (self.params,), (self.adapter, self.scheme, self.table, self.report)
+        return (self.params, self.verify_params), (
+            self.adapter,
+            self.scheme,
+            self.table,
+            self.report,
+        )
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         adapter, scheme, table, report = aux
-        return cls(children[0], adapter, scheme, table=table, report=report)
+        return cls(
+            children[0], adapter, scheme, table=table, report=report,
+            verify_params=children[1],
+        )
 
     # -- execution ----------------------------------------------------------
     def forward(self, x, *, impl: str | None = None, block_sizes=None, interpret=None) -> Array:
@@ -379,7 +423,25 @@ class QuantizedModel:
         generation and non-transformer families keep the static
         lockstep loop. Either way the decode step consumes the packed
         leaves directly — codes enter the graph as uint8.
+
+        Speculative artifacts (``scheme.spec_k``) decode
+        self-speculatively: the packed draft tier proposes, the verify
+        tier checks and defines the output — token-identical to serving
+        the verify tier alone, at a higher tokens/sec (DESIGN.md §10).
         """
+        if self.scheme.spec_k:
+            return self.adapter.generate(
+                self.verify_params,
+                batch,
+                max_new_tokens,
+                greedy=greedy,
+                key=key,
+                draft_params=(
+                    self.params if self.scheme.spec_draft == "model" else None
+                ),
+                spec_k=self.scheme.spec_k,
+                spec_draft=self.scheme.spec_draft,
+            )
         return self.adapter.generate(
             self.params, batch, max_new_tokens, greedy=greedy, key=key
         )
@@ -396,7 +458,25 @@ class QuantizedModel:
         generated tokens come back as a list of int32 arrays in request
         order. ``max_len`` is the per-slot cache capacity (default: the
         largest ``len(prompt) + max_new`` over the requests).
+
+        Speculative artifacts serve draft/verify rounds (see
+        :meth:`generate`); output is token-identical to serving the
+        verify tier alone.
         """
+        if self.scheme.spec_k:
+            return self.adapter.serve(
+                self.verify_params,
+                requests,
+                n_slots=n_slots,
+                max_len=max_len,
+                mesh=mesh,
+                flash_decode=flash_decode,
+                draft_params=(
+                    self.params if self.scheme.spec_draft == "model" else None
+                ),
+                spec_k=self.scheme.spec_k,
+                spec_draft=self.scheme.spec_draft,
+            )
         return self.adapter.serve(
             self.params,
             requests,
@@ -413,7 +493,10 @@ class QuantizedModel:
         Layout: ``manifest.json`` (model/scheme/report/tree structure +
         per-leaf SHA-256 checksums), ``params/`` (checkpoint-manager
         step with the packed pytree), ``calib.json`` (calibration
-        table, when the scheme is static).
+        table, when the scheme is static), ``verify_params/`` (the
+        speculative verify tier, when the scheme carries one — its
+        structure and checksums ride the manifest under
+        ``verify_tree``/``verify_checksums``).
         """
         os.makedirs(path, exist_ok=True)
         flat, _ = _flatten_tree(self.params)
@@ -432,6 +515,14 @@ class QuantizedModel:
             "checksums": checks,
             "has_calib": self.table is not None,
         }
+        if self.verify_params is not None:
+            vflat, _ = _flatten_tree(self.verify_params)
+            manifest["verify_tree"] = _tree_to_json(self.verify_params)
+            manifest["verify_checksums"] = {k: _leaf_sha256(v) for k, v in vflat.items()}
+            vmgr = CheckpointManager(
+                os.path.join(path, _VERIFY_DIR), keep=1, async_save=False
+            )
+            vmgr.save(0, self.verify_params)
         tmp = os.path.join(path, _MANIFEST + ".tmp")
         with open(tmp, "w") as f:
             json.dump(manifest, f, indent=1)
@@ -489,6 +580,41 @@ class QuantizedModel:
             if _leaf_sha256(v) != declared[k]:
                 raise ArtifactError(f"checksum mismatch for leaf {k!r} — artifact corrupted")
 
+        verify_params = None
+        if scheme.spec_k:
+            # a speculative scheme WITHOUT its verify tier must not load:
+            # serving it would silently emit draft-tier tokens
+            if "verify_tree" not in doc or "verify_checksums" not in doc:
+                raise ArtifactError(
+                    "artifact's scheme is speculative but the manifest has no "
+                    "verify tier (verify_tree/verify_checksums) — incomplete save"
+                )
+            try:
+                vexample = _tree_from_json(doc["verify_tree"])
+            except (TypeError, ValueError, KeyError) as e:
+                raise ArtifactError(f"malformed verify tree: {e}") from e
+            vmgr = CheckpointManager(
+                os.path.join(path, _VERIFY_DIR), keep=0, async_save=False
+            )
+            vrestored = vmgr.restore_latest(vexample)
+            if vrestored is None:
+                raise ArtifactError(
+                    f"verify-tier checkpoint under {path!r} is missing or unreadable"
+                )
+            _, verify_params = vrestored
+            vflat, _ = _flatten_tree(verify_params)
+            vdeclared = doc["verify_checksums"]
+            if set(vflat) != set(vdeclared):
+                raise ArtifactError(
+                    f"verify-tier leaves {sorted(set(vflat) ^ set(vdeclared))} do "
+                    "not match the manifest"
+                )
+            for k, v in vflat.items():
+                if _leaf_sha256(v) != vdeclared[k]:
+                    raise ArtifactError(
+                        f"checksum mismatch for verify leaf {k!r} — artifact corrupted"
+                    )
+
         table = None
         if doc.get("has_calib"):
             try:
@@ -501,7 +627,10 @@ class QuantizedModel:
                 report = ConversionReport.from_json(doc["report"])
             except (TypeError, ValueError, KeyError) as e:
                 raise ArtifactError(f"malformed conversion report: {e}") from e
-        return cls(params, adapter, scheme, table=table, report=report)
+        return cls(
+            params, adapter, scheme, table=table, report=report,
+            verify_params=verify_params,
+        )
 
 
 jax.tree_util.register_pytree_with_keys_class(QuantizedModel)

@@ -89,6 +89,27 @@ class QuantScheme:
     :func:`repro.api.quantize` receives an ``eval_fn``):
       ac: maximum tolerated accuracy drop.
       bw_max / bw_min: activation bit-width search range.
+
+    Speculative serving (LMs; DESIGN.md §10):
+      spec_verify: the VERIFY tier — ``"float"`` (the unquantized
+        checkpoint) or an ELP_BSD format name strictly wider than
+        ``fmt``. When set, :func:`repro.api.quantize` packs a second
+        tier of the same checkpoint and ``QuantizedModel.generate`` /
+        ``serve`` decode self-speculatively: ``fmt`` (the aggressive
+        low-bit artifact) drafts, ``spec_verify`` verifies and defines
+        the output. Built with :meth:`QuantScheme.speculative`.
+      spec_k: verify width W (draft steps per round); >= 2 when
+        ``spec_verify`` is set, else 0.
+      spec_draft: where drafts come from — ``"model"`` (the ``fmt``
+        tier's own forward drafts token by token; the paper-faithful
+        mode, fastest where low-bit forwards are genuinely cheaper than
+        the verify tier's) or ``"ngram"`` (token-recycling prompt
+        lookup: the engine replays, from its own verified output
+        history, which token followed each token — drafting costs no
+        model forward at all, so a round is ONE wide verify dispatch;
+        the fast mode on dispatch-overhead-bound hosts like CPU CI).
+        Either way the verify tier defines the output, so the served
+        stream is token-identical regardless of drafter quality.
     """
 
     fmt: str = "elp_bsd_a4"
@@ -105,9 +126,30 @@ class QuantScheme:
     ac: float = 0.01
     bw_max: int = 8
     bw_min: int = 4
+    spec_verify: str | None = None
+    spec_k: int = 0
+    spec_draft: str = "model"
 
     def __post_init__(self) -> None:
         object.__setattr__(self, "fmt", resolve_format(self.fmt).name)
+        if (self.spec_verify is None) != (self.spec_k == 0):
+            raise ValueError(
+                "speculative schemes set BOTH spec_verify (the verify tier) and "
+                "spec_k (the verify width), or neither — use QuantScheme.speculative()"
+            )
+        if self.spec_verify is not None:
+            if self.spec_k < 2:
+                raise ValueError(
+                    f"spec_k is the verify width: need >= 2, got {self.spec_k}"
+                )
+            if self.spec_verify != "float":
+                object.__setattr__(
+                    self, "spec_verify", resolve_format(self.spec_verify).name
+                )
+        if self.spec_draft not in ("model", "ngram"):
+            raise ValueError(
+                f'spec_draft must be "model" or "ngram", got {self.spec_draft!r}'
+            )
         if self.act not in ACT_POLICIES:
             raise ValueError(f"act must be one of {ACT_POLICIES}, got {self.act!r}")
         if self.granularity not in GRANULARITIES:
@@ -136,6 +178,30 @@ class QuantScheme:
             raise ValueError(
                 f"need 2 <= bw_min <= bw_max, got bw_min={self.bw_min} bw_max={self.bw_max}"
             )
+
+    @classmethod
+    def speculative(
+        cls,
+        draft: str = "elp_bsd_a4",
+        K: int = 4,
+        verify: str = "float",
+        drafter: str = "model",
+        **kw,
+    ) -> "QuantScheme":
+        """A self-speculative serving scheme (DESIGN.md §10).
+
+        ``draft`` is the scheme's ``fmt`` — the aggressively quantized
+        tier that drafts ``K - 1`` tokens per round; ``verify``
+        (``"float"`` or a wider ELP format) checks each run in one
+        ``K``-wide forward and defines the served output. ``drafter``
+        picks the draft source (``"model"``: the ``fmt`` tier decodes
+        the drafts; ``"ngram"``: token-recycling prompt lookup — no
+        draft forwards at all). Any other :class:`QuantScheme` field
+        passes through ``**kw``.
+        """
+        return cls(
+            fmt=draft, spec_verify=verify, spec_k=int(K), spec_draft=drafter, **kw
+        )
 
     @property
     def format(self) -> ElpBsdFormat:
@@ -562,11 +628,22 @@ class LmAdapter:
         *,
         greedy: bool = True,
         key: Array | None = None,
+        draft_params: Any = None,
+        spec_k: int = 0,
+        spec_draft: str = "model",
     ):
         from repro.serve.engine import batch_generate
 
         return batch_generate(
-            self.cfg, params, self._batch(batch), max_new_tokens, greedy=greedy, key=key
+            self.cfg,
+            params,
+            self._batch(batch),
+            max_new_tokens,
+            greedy=greedy,
+            key=key,
+            draft_params=draft_params,
+            spec_k=spec_k,
+            spec_draft=spec_draft,
         )
 
     def serve(
@@ -578,8 +655,18 @@ class LmAdapter:
         max_len: int | None = None,
         mesh="auto",
         flash_decode: bool = False,
+        draft_params: Any = None,
+        spec_k: int = 0,
+        spec_draft: str = "model",
     ) -> list:
-        """Continuous-batching serving through :class:`repro.serve.ServeEngine`."""
+        """Continuous-batching serving through :class:`repro.serve.ServeEngine`.
+
+        ``spec_k`` turns on self-speculative decoding: ``params``
+        becomes the verify tier (it defines the output), drafted
+        against by ``draft_params`` (``spec_draft="model"``) or the
+        engine's token-recycling history (``spec_draft="ngram"``;
+        DESIGN.md §10).
+        """
         import numpy as np
 
         from repro.serve.engine import ServeEngine
@@ -596,6 +683,9 @@ class LmAdapter:
             max_len=max_len,
             mesh=mesh,
             flash_decode=flash_decode,
+            draft_params=draft_params,
+            spec_k=spec_k,
+            spec_draft=spec_draft,
         )
         return eng.serve(reqs)
 

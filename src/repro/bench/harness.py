@@ -73,3 +73,48 @@ def output_mse(got, want) -> float:
     g = np.asarray(got, np.float64)
     w = np.asarray(want, np.float64)
     return float(np.mean((g - w) ** 2))
+
+
+def lm_weight_macs_per_token(cfg) -> int:
+    """Weight-MACs per decoded token of a transformer LM.
+
+    Attention projections (q/k/v/o), the FFN matmuls, and the lm_head,
+    times layers — the MACs that stream weights, which is what the
+    Table II weight-stationary energy model charges. Attention *score*
+    MACs are context-length-dependent and weight-free, so they are
+    deliberately excluded. MoE counts the ``topk`` active experts.
+    """
+    d, h, kv = cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    hd = cfg.head_dim or d // h
+    attn = d * h * hd + 2 * d * kv * hd + h * hd * d
+    ffn = (3 if cfg.mlp_kind == "swiglu" else 2) * d * cfg.d_ff
+    if cfg.n_experts:
+        ffn *= cfg.topk
+    return cfg.n_layers * (attn + ffn) + d * cfg.vocab
+
+
+def lm_token_energy(cfg, params, act_bits: int | None = None) -> dict:
+    """Table II modeled energy (nJ) per decoded token for an LM tree.
+
+    The MAC format is the packed leaves' dominant ``fmt_name``
+    (``conventional_fp`` for a float tree); the memory term charges the
+    tree's actual storage bytes — a whole-tree weight stream per decode
+    step, the serve engine's HBM story. Returns the
+    :func:`repro.core.energy.network_energy_nj` split plus the format
+    and MAC count it used.
+    """
+    from collections import Counter
+
+    from repro.core.energy import network_energy_nj
+    from repro.kernels.ops import PackedWeight
+    from repro.runtime.quantized_params import packed_bytes
+
+    fmts = Counter(
+        leaf.fmt_name
+        for leaf in jax.tree.leaves(params, is_leaf=lambda x: isinstance(x, PackedWeight))
+        if isinstance(leaf, PackedWeight)
+    )
+    fmt = fmts.most_common(1)[0][0] if fmts else "conventional_fp"
+    macs = lm_weight_macs_per_token(cfg)
+    e = network_energy_nj(macs, packed_bytes(params), fmt, act_bits or 8)
+    return {"fmt": fmt, "macs_per_token": macs, **e}

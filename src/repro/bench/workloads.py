@@ -477,6 +477,7 @@ def _run_serve_continuous(quant, n_slots, n_requests, iters, warmup):
         total += n
     tok_s_cont = useful_tokens / (t_cont.min_us * 1e-6)
     tok_s_static = useful_tokens / (t_static.min_us * 1e-6)
+    energy = harness.lm_token_energy(cfg, params)
 
     return {
         "workload": "serve_continuous",
@@ -495,8 +496,169 @@ def _run_serve_continuous(quant, n_slots, n_requests, iters, warmup):
             "tokens_per_s_static": round(tok_s_static, 1),
             "speedup_vs_static": round(tok_s_cont / tok_s_static, 3),
             "token_match_frac": round(matched / total, 4),
+            "energy_nj_per_token": round(energy["total_nj"], 2),
+            "energy_compute_nj_per_token": round(energy["compute_nj"], 2),
+            "energy_memory_nj_per_token": round(energy["memory_nj"], 2),
         },
         "bytes": {"weight_bytes": packed_bytes(params), "float_bytes": float_bytes},
+    }
+
+
+def _spec_trace(n_requests: int):
+    """Generation-heavy staggered trace for the speculative workload:
+    short prompts, large token budgets, overlapping arrivals — the
+    serving regime speculation targets (decode-dominated, slots busy).
+    The mixed-everything `_serve_trace` stays the admission/eviction
+    stress shape for `serve_continuous`."""
+    pattern = [(8, 96, 0), (8, 88, 0), (8, 100, 1), (16, 80, 2), (8, 96, 3), (8, 88, 4)]
+    out = []
+    for i in range(n_requests):
+        s, n, a = pattern[i % len(pattern)]
+        out.append((s, n, a + 4 * (i // len(pattern))))
+    return out
+
+
+def _run_serve_speculative(spec_k, n_slots, n_requests, iters, warmup):
+    from repro import api as front
+    from repro.runtime.quantized_params import packed_bytes
+    from repro.runtime.train_loop import TrainSetup, train
+    from repro.serve import ServeEngine, ServeSetup, static_generate
+
+    cfg = _serve_bench_cfg()
+    # Speculation pays only when drafts agree with the verify tier, and
+    # a random-init net's argmax is chaotic under any perturbation — so
+    # train the tiny arch briefly (fixed seed, synthetic stream). That
+    # is also the honest setting: the paper's premise is that ELP_BSD
+    # quantization preserves a TRAINED net's behaviour, and real served
+    # text is low-entropy (that predictability is where every
+    # speculative decoder's acceptance comes from).
+    train_steps = 200
+    params = train(
+        TrainSetup(
+            cfg=cfg, mesh=None, lr_peak=3e-3, warmup=20,
+            total_steps=train_steps, remat=False,
+        ),
+        steps=train_steps, batch_size=16, seq_len=64,
+        log_every=10_000, log_fn=lambda _s: None,
+    )["params"]
+    qm = front.quantize(
+        cfg, params, front.QuantScheme.speculative(draft="elp4", K=spec_k)
+    )
+
+    rng = np.random.default_rng(13)
+    trace = _spec_trace(n_requests)
+    reqs = [(rng.integers(0, cfg.vocab, size=s).astype(np.int32), n) for s, n, _ in trace]
+    arrivals = [a for _, _, a in trace]
+    max_len = 128
+    useful_tokens = sum(n for _, n in reqs)
+
+    # Headline: the ngram drafter — drafts are free host lookups, a
+    # round is ONE wide verify dispatch, so the win survives a
+    # dispatch/op-overhead-bound host (this CI). Secondary, recorded in
+    # the same entry: the elp4 model drafter — the paper-faithful mode
+    # whose win needs the low-bit forward to be genuinely cheaper than
+    # the verify tier's (true on weight-bandwidth-bound accelerators,
+    # NOT on this CPU, where its recorded speedup is honestly < 1).
+    ngram_eng = ServeEngine(
+        cfg, qm.verify_params, n_slots=n_slots, max_len=max_len, mesh=None,
+        spec_k=spec_k, spec_draft="ngram",
+    )
+    model_eng = ServeEngine(
+        cfg, qm.verify_params, n_slots=n_slots, max_len=max_len, mesh=None,
+        draft_params=qm.params, spec_k=spec_k,
+    )
+    base_eng = ServeEngine(cfg, qm.verify_params, n_slots=n_slots, max_len=max_len, mesh=None)
+
+    t_spec = harness.time_fn(
+        lambda: ngram_eng.serve(reqs, arrivals=arrivals), iters=iters, warmup=warmup
+    )
+    t_model = harness.time_fn(
+        lambda: model_eng.serve(reqs, arrivals=arrivals), iters=iters, warmup=warmup
+    )
+    t_base = harness.time_fn(
+        lambda: base_eng.serve(reqs, arrivals=arrivals), iters=iters, warmup=warmup
+    )
+
+    # Token identity: BOTH speculative engines' output vs per-request
+    # static generation on the verify tier — the output CONTRACT, gated
+    # at 1.0 regardless of drafter quality.
+    matched = total = 0
+    for eng in (ngram_eng, model_eng):
+        outs = eng.serve(reqs, arrivals=arrivals)
+        for (prompt, n), out in zip(reqs, outs):
+            setup = ServeSetup(cfg=cfg, mesh=None, max_len=prompt.size + n, batch=1)
+            ref = np.asarray(
+                static_generate(
+                    setup, qm.verify_params, {"tokens": jnp.asarray(prompt[None])}, n
+                )
+            )[0]
+            matched += int(np.sum(ref == out))
+            total += n
+    ngram_stats = ngram_eng.stats()["speculative"]
+    model_stats = model_eng.stats()["speculative"]
+    acc_rate = ngram_stats["acceptance_rate"]
+
+    tok_s_spec = useful_tokens / (t_spec.min_us * 1e-6)
+    tok_s_model = useful_tokens / (t_model.min_us * 1e-6)
+    tok_s_base = useful_tokens / (t_base.min_us * 1e-6)
+
+    # Blended Table II energy per EMITTED token. An ngram round runs
+    # ONE W-wide verify forward (W tokens of compute, one weight
+    # stream) and emits ~1 + acceptance*(W-1) tokens; a model round
+    # additionally pays W single-token draft forwards (draft weights
+    # streamed every step).
+    e_draft = harness.lm_token_energy(cfg, qm.params)
+    e_verify = harness.lm_token_energy(cfg, qm.verify_params)
+    emitted = 1.0 + acc_rate * (spec_k - 1)
+    ngram_nj = (spec_k * e_verify["compute_nj"] + e_verify["memory_nj"]) / emitted
+    emitted_m = 1.0 + model_stats["acceptance_rate"] * (spec_k - 1)
+    model_nj = (
+        spec_k * (e_draft["compute_nj"] + e_verify["compute_nj"])
+        + spec_k * e_draft["memory_nj"]
+        + e_verify["memory_nj"]
+    ) / emitted_m
+
+    return {
+        "workload": "serve_speculative",
+        "shape": {
+            "arch": cfg.name,
+            "draft": e_draft["fmt"],
+            "verify": e_verify["fmt"],
+            "drafter": "ngram",
+            "spec_k": spec_k,
+            "n_slots": n_slots,
+            "n_requests": n_requests,
+            "max_len": max_len,
+            "useful_tokens": useful_tokens,
+            "train_steps": train_steps,
+        },
+        "wall_us": {
+            "speculative": t_spec.to_json(),
+            "model_draft": t_model.to_json(),
+            "baseline": t_base.to_json(),
+        },
+        "hlo": ngram_eng.decode_cost(),
+        "quality": {
+            "tokens_per_s_speculative": round(tok_s_spec, 1),
+            "tokens_per_s_model_draft": round(tok_s_model, 1),
+            "tokens_per_s_baseline": round(tok_s_base, 1),
+            "speedup_vs_baseline": round(tok_s_spec / tok_s_base, 3),
+            "speedup_model_draft": round(tok_s_model / tok_s_base, 3),
+            "token_match_frac": round(matched / total, 4),
+            "acceptance_rate": round(acc_rate, 4),
+            "acceptance_rate_model_draft": round(
+                model_stats["acceptance_rate"], 4
+            ),
+            "tokens_drafted": ngram_stats["tokens_drafted"],
+            "tokens_accepted": ngram_stats["tokens_accepted"],
+            "energy_nj_per_token": round(ngram_nj, 2),
+            "energy_nj_per_token_model_draft": round(model_nj, 2),
+            "energy_nj_per_token_baseline": round(e_verify["total_nj"], 2),
+        },
+        "bytes": {
+            "draft_bytes": packed_bytes(qm.params),
+            "verify_bytes": packed_bytes(qm.verify_params),
+        },
     }
 
 
@@ -538,6 +700,22 @@ def _register_e2e_suite() -> None:
                 tier=tier,
                 run=functools.partial(_run_serve_continuous, quant, n_slots, n_requests),
                 tags=("serve_continuous", quant),
+            )
+        )
+    # Self-speculative serving: elp4 drafts, the float tier verifies —
+    # token-identical to serving float alone, measured against the
+    # non-speculative engine on the same trace (DESIGN.md §10).
+    for tier, spec_k, n_slots, n_requests in (
+        ("smoke", 7, 4, 6),
+        ("full", 7, 4, 12),
+    ):
+        register(
+            WorkloadSpec(
+                name=f"serve_speculative/serve_bench/elp4_to_float/k{spec_k}s{n_slots}r{n_requests}",
+                suite="e2e",
+                tier=tier,
+                run=functools.partial(_run_serve_speculative, spec_k, n_slots, n_requests),
+                tags=("serve_speculative", "elp4"),
             )
         )
 

@@ -54,6 +54,23 @@ def main() -> None:
     ap.add_argument("--quant", default=None, choices=[None, "elp4", "elp8"])
     ap.add_argument("--flash-decode", action="store_true")
     ap.add_argument("--static", action="store_true", help="legacy lockstep batch loop")
+    ap.add_argument(
+        "--speculative",
+        action="store_true",
+        help="self-speculative draft/verify serving (DESIGN.md §10): the "
+        "--draft-fmt tier (or the ngram table) drafts, the launcher's "
+        "serving weights verify and define the output",
+    )
+    ap.add_argument(
+        "--spec-k", type=int, default=7, help="speculative verify width (>= 2)"
+    )
+    ap.add_argument(
+        "--draft-fmt",
+        default="elp4",
+        choices=["elp4", "elp8", "ngram"],
+        help='draft source for --speculative: a packed tier of the same '
+        'checkpoint, or "ngram" (token-recycling lookup, no draft forwards)',
+    )
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -61,6 +78,22 @@ def main() -> None:
         cfg = cfg.reduced()
     api = get_model(cfg)
     params = api.init_params(cfg, jax.random.PRNGKey(0))
+    draft_params = None
+    spec_draft = "model"
+    if args.speculative and args.draft_fmt != "ngram":
+        from repro import api as front
+
+        draft_params = front.quantize(
+            cfg, params, front.QuantScheme(fmt=args.draft_fmt)
+        ).params
+        print(
+            f"speculative serving: {args.draft_fmt} drafts "
+            f"({packed_bytes(draft_params) / 1e6:.1f} MB), "
+            f"{'packed' if args.quant else 'float'} verifies, K={args.spec_k}"
+        )
+    elif args.speculative:
+        spec_draft = "ngram"
+        print(f"speculative serving: ngram drafts, K={args.spec_k}")
     if args.quant:
         from repro import api as front
 
@@ -70,6 +103,13 @@ def main() -> None:
     ds = LmDataset(cfg, seq_len=args.prompt_len, batch=max(args.slots, 4), seed=7)
     max_len = args.prompt_len + args.max_new
 
+    if args.speculative and (
+        args.static or cfg.family not in ENGINE_FAMILIES or cfg.frontend_tokens
+    ):
+        raise SystemExit(
+            "--speculative needs the slot engine (transformer families, not "
+            "--static): the lockstep loop has no draft/verify path"
+        )
     if args.static or cfg.family not in ENGINE_FAMILIES or cfg.frontend_tokens:
         from repro.runtime.elastic import make_mesh
 
@@ -94,6 +134,9 @@ def main() -> None:
         n_slots=args.slots,
         max_len=max_len,
         flash_decode=args.flash_decode,
+        draft_params=draft_params,
+        spec_k=args.spec_k if args.speculative else 0,
+        spec_draft=spec_draft,
     )
     reqs, arrivals = _trace(ds, args.prompt_len, args.requests, args.max_new)
     t0 = time.perf_counter()
@@ -108,6 +151,13 @@ def main() -> None:
         f"({st['tokens_generated'] / dt:.1f} tok/s; {st['decode_steps']} decode steps, "
         f"{st['prefills']} prefills, mesh={st['mesh']})"
     )
+    if "speculative" in st:
+        sp = st["speculative"]
+        print(
+            f"speculative: {sp['drafter']} drafter, K={sp['spec_k']}, "
+            f"{sp['rounds']} rounds, {sp['tokens_accepted']}/{sp['tokens_drafted']} "
+            f"drafted tokens accepted ({sp['acceptance_rate']:.3f})"
+        )
     sr = st["straggler"]
     print(
         f"straggler report: {sr['straggle_events']} slow steps over {sr['steps']} "

@@ -36,31 +36,34 @@ F32 = jnp.float32
 
 
 def _local_attn(q, k, v, ks, vs, pos, *, axis: str, window: int, n_rep: int):
-    """Per-shard body. q[B,1,H,hd]; k/v[B,s_loc,KV,hd] = this shard's
+    """Per-shard body. q[B,sq,H,hd]; k/v[B,s_loc,KV,hd] = this shard's
     slice (optionally int8 with per-token-head scales ks/vs). ``pos`` is
     a scalar (lockstep batch) or a per-row ``[B]`` vector (continuous
-    batching: each slot masked to its own depth)."""
-    b, _, h, hd = q.shape
+    batching: each slot masked to its own depth). ``sq > 1`` is the
+    speculative verify run: query ``i`` of row ``b`` sits at position
+    ``pos[b] + i`` and is masked causally within the run."""
+    b, sq, h, hd = q.shape
     s_loc = k.shape[1]
     idx = jax.lax.axis_index(axis)
     kpos = idx * s_loc + jnp.arange(s_loc)
-    pos = pos.reshape((-1, 1, 1))  # scalar -> [1,1,1]; [B] -> [B,1,1]
+    # query positions: [B|1, 1, sq, 1], broadcasting against kpos below
+    qpos = pos.reshape((-1, 1, 1, 1)) + jnp.arange(sq).reshape((1, 1, sq, 1))
 
     kf = k.astype(F32) if ks is None else k.astype(F32) * ks
     vf = v.astype(F32) if vs is None else v.astype(F32) * vs
     kf = jnp.repeat(kf, n_rep, axis=2)  # [B,s,H,hd]
     vf = jnp.repeat(vf, n_rep, axis=2)
     qf = q.astype(F32) * (1.0 / math.sqrt(hd))
-    logits = jnp.einsum("bhd,bshd->bhs", qf[:, 0], kf)
-    mask = kpos[None, None, :] <= pos  # [B|1, 1, s_loc], broadcasts over H
+    logits = jnp.einsum("bqhd,bshd->bhqs", qf, kf)  # [B,H,sq,s_loc]
+    mask = kpos.reshape((1, 1, 1, -1)) <= qpos  # [B|1,1,sq,s_loc], broadcasts over H
     if window:
-        mask &= (pos - kpos[None, None, :]) < window
+        mask &= (qpos - kpos.reshape((1, 1, 1, -1))) < window
     logits = jnp.where(mask, logits, -1e30)
 
-    m = jnp.max(logits, axis=-1)  # [B,H]
+    m = jnp.max(logits, axis=-1)  # [B,H,sq]
     p = jnp.exp(logits - m[..., None])
-    l = jnp.sum(p, axis=-1)  # [B,H]
-    acc = jnp.einsum("bhs,bshd->bhd", p, vf)  # [B,H,hd]
+    l = jnp.sum(p, axis=-1)  # [B,H,sq]
+    acc = jnp.einsum("bhqs,bshd->bhqd", p, vf)  # [B,H,sq,hd]
 
     # combine softmax stats across seq shards — the ONLY collective
     mg = jax.lax.pmax(m, axis)
@@ -68,7 +71,7 @@ def _local_attn(q, k, v, ks, vs, pos, *, axis: str, window: int, n_rep: int):
     lg = jax.lax.psum(l * corr, axis)
     accg = jax.lax.psum(acc * corr[..., None], axis)
     out = accg / jnp.maximum(lg, 1e-30)[..., None]
-    return out[:, None].astype(q.dtype)  # [B,1,H,hd]
+    return jnp.moveaxis(out, 1, 2).astype(q.dtype)  # [B,sq,H,hd]
 
 
 def flash_decode_attention(

@@ -152,11 +152,14 @@ def attention_chunked(
     causal: bool = True,
     window: int = 0,
     chunk: int = 1024,
+    q_offset: int | Array = 0,
 ) -> Array:
     """Flash-style attention: scan over KV chunks with running max/sum.
 
     Memory O(Sq · chunk); HLO is one scan body regardless of S. Equals
     :func:`attention_dot` to float tolerance (property-tested).
+    ``q_offset`` positions the queries exactly as in
+    :func:`attention_dot` (scalar shared offset or per-row ``[B]``).
     """
     b, sq, h, hd = q.shape
     sk = k.shape[1]
@@ -166,19 +169,21 @@ def attention_chunked(
     n_chunks = sk // chunk
     kc = k.reshape(b, n_chunks, chunk, h, hd)
     vc = v.reshape(b, n_chunks, chunk, h, hd)
-    qpos = jnp.arange(sq)
+    q_offset = jnp.asarray(q_offset)
+    # qpos: [sq] (shared offset) or [B, sq] (per-row offsets)
+    qpos = (q_offset[:, None] if q_offset.ndim == 1 else q_offset) + jnp.arange(sq)
 
     def body(carry, inp):
         m, l, acc = carry
         kb, vb, c_idx = inp
         logits = jnp.einsum("bqhd,bkhd->bhqk", qf, kb.astype(F32))
         kpos = c_idx * chunk + jnp.arange(chunk)
-        msk = jnp.ones((sq, chunk), bool)
+        msk = jnp.ones(qpos.shape + (chunk,), bool)
         if causal:
-            msk &= qpos[:, None] >= kpos[None, :]
+            msk &= qpos[..., None] >= kpos
         if window:
-            msk &= qpos[:, None] - kpos[None, :] < window
-        logits = jnp.where(msk[None, None], logits, -1e30)
+            msk &= qpos[..., None] - kpos < window
+        logits = jnp.where(msk[:, None] if msk.ndim == 3 else msk[None, None], logits, -1e30)
         m_new = jnp.maximum(m, logits.max(-1))
         p = jnp.exp(logits - m_new[..., None])
         corr = jnp.exp(m - m_new)

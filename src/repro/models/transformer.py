@@ -168,7 +168,11 @@ def _attention(
         cks = _cache_set(cks, ksf, cache_pos)
         cvs = _cache_set(cvs, vsf, cache_pos)
         new_cache = (ck, cv, cks, cvs)
-        if s == 1 and pctx is not None and pctx.flash_decode:
+        if (
+            (s == 1 or jnp.ndim(cache_pos) == 1)
+            and pctx is not None
+            and pctx.flash_decode
+        ):
             from repro.models.flash_decode import flash_decode_attention
 
             out = flash_decode_attention(
@@ -185,7 +189,12 @@ def _attention(
         new_cache = (ck, cv)
 
     q_offset = cache_pos if kv_cache is not None else 0
-    if kv_cache is not None and s == 1 and pctx is not None and pctx.flash_decode:
+    # "decode" = querying the cache at per-row depth: one token per row
+    # (s == 1) or a K-token speculative verify run over a per-slot
+    # position vector (DESIGN.md §10). Prefill (scalar cache_pos 0,
+    # s == prompt) takes the chunked/dot paths below.
+    decode = kv_cache is not None and (s == 1 or jnp.ndim(cache_pos) == 1)
+    if decode and pctx is not None and pctx.flash_decode:
         # §Perf: flash-decoding over the seq-sharded cache (stats-only
         # collective instead of a [B,H,1,S] partial-sum all-reduce).
         from repro.models.flash_decode import flash_decode_attention
@@ -194,11 +203,14 @@ def _attention(
         return matmul(out.reshape(b, s, h * hd), lp[prefix + "o"]), new_cache
     kf = repeat_kv(k, h // kv)
     vf = repeat_kv(v, h // kv)
-    if kv_cache is not None and s == 1:
-        # decode: one query against the cache
+    if decode:
+        # decode: s queries per row against the cache, each masked to
+        # its own row's depth
         out = attention_dot(q, kf, vf, causal=causal, window=window, q_offset=q_offset)
     elif kf.shape[1] >= CHUNKED_ATTN_THRESHOLD:
-        out = attention_chunked(q, kf, vf, causal=causal, window=window, chunk=ATTN_CHUNK)
+        out = attention_chunked(
+            q, kf, vf, causal=causal, window=window, chunk=ATTN_CHUNK, q_offset=q_offset
+        )
     else:
         out = attention_dot(q, kf, vf, causal=causal, window=window, q_offset=q_offset)
     mix = out.reshape(b, s, h * hd)
@@ -469,17 +481,23 @@ def _cache_set(c: Array, u: Array, pos: Array) -> Array:
     A scalar ``pos`` is the static-batch layout: one contiguous
     ``dynamic_update_slice`` at the same offset for every row (prefill,
     lockstep decode). A vector ``pos[B]`` is the continuous-batching
-    layout — one decode token per row, each at its OWN slot position
-    (``s`` must be 1) — written as a per-row scatter (row indices are
-    iota, so only row ``b`` changes, at ``pos[b]``; ~5x cheaper than a
-    one-hot select of the whole cache, and multi-device parity tests
-    pin that the SPMD partitioner handles it).
+    layout — ``s`` tokens per row, each row starting at its OWN slot
+    position (``s == 1`` for the plain decode step; ``s == K`` for the
+    speculative verify step, row ``b`` writing ``pos[b] .. pos[b]+s-1``)
+    — written as a per-row scatter (row indices are iota, so only row
+    ``b`` changes, at its own offsets; ~5x cheaper than a one-hot
+    select of the whole cache, and multi-device parity tests pin that
+    the SPMD partitioner handles it).
     """
     pos = jnp.asarray(pos)
     u = u.astype(c.dtype)
     if pos.ndim == 0:
         return jax.lax.dynamic_update_slice(c, u, (0, pos) + (0,) * (c.ndim - 2))
-    return c.at[jnp.arange(c.shape[0]), pos].set(u[:, 0])
+    if u.shape[1] == 1:
+        return c.at[jnp.arange(c.shape[0]), pos].set(u[:, 0])
+    rows = jnp.arange(c.shape[0])[:, None]
+    cols = pos[:, None] + jnp.arange(u.shape[1])[None, :]
+    return c.at[rows, cols].set(u)
 
 
 def _cache_q(x: Array) -> tuple[Array, Array]:
@@ -526,18 +544,21 @@ def decode_step(
     *,
     pctx: ParallelCtx | None = None,
 ) -> tuple[Array, dict[str, Array]]:
-    """One decode step: token ``[B, 1]`` at position ``pos`` → logits.
+    """One decode step: token ``[B, s]`` at position ``pos`` → logits.
 
     ``pos`` is a scalar (static batch: every row at the same position)
     or a ``[B]`` vector of per-slot positions (continuous batching,
     DESIGN.md §9): each row's KV is written at its own offset and its
-    attention masked to its own past.
+    attention masked to its own past. ``s > 1`` is the speculative
+    verify step (DESIGN.md §10): row ``b``'s tokens occupy positions
+    ``pos[b] .. pos[b]+s-1``, causal within the run.
     """
     pos = jnp.asarray(pos)
+    s = token.shape[1]
     if pos.ndim == 0:
-        positions = pos[None, None]
+        positions = pos[None, None] + jnp.arange(s)[None, :]
     elif pos.ndim == 1:
-        positions = pos[:, None]
+        positions = pos[:, None] + jnp.arange(s)[None, :]
     else:
         positions = pos
     x = params["embed"][token].astype(cfg.dtype)

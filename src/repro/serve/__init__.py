@@ -11,15 +11,21 @@ Public surface:
   * :func:`~repro.serve.engine.build_serve_fns` /
     :func:`~repro.serve.engine.build_slot_prefill` — the jitted step
     builders (whole-batch prefill+decode, per-slot admission prefill).
+  * :func:`~repro.serve.engine.build_draft_run` /
+    :func:`~repro.serve.engine.build_verify_step` — the speculative
+    round's two jits: the scanned W-step draft loop and the W-wide
+    verify (argmax + acceptance counting fused; DESIGN.md §10).
 """
 from repro.serve.engine import (
     ENGINE_FAMILIES,
     ServeEngine,
     ServeSetup,
     batch_generate,
+    build_draft_run,
     build_greedy_decode,
     build_serve_fns,
     build_slot_prefill,
+    build_verify_step,
     static_generate,
 )
 from repro.serve.scheduler import Request, SlotScheduler
@@ -31,8 +37,10 @@ __all__ = [
     "ServeSetup",
     "SlotScheduler",
     "batch_generate",
+    "build_draft_run",
     "build_greedy_decode",
     "build_serve_fns",
     "build_slot_prefill",
+    "build_verify_step",
     "static_generate",
 ]

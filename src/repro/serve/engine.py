@@ -244,6 +244,120 @@ def build_greedy_decode(setup: ServeSetup, api: ModelApi | None = None, aparams:
     )
 
 
+def build_draft_run(setup: ServeSetup, api: ModelApi | None = None, aparams: Any = None):
+    """Jitted W-step speculative draft loop (DESIGN.md §10).
+
+    ``draft(params, token[B, 1], cache, pos[B], width) -> (run, cache)``
+    chains ``width`` greedy single-token decode steps of the DRAFT tier
+    inside one ``lax.scan`` — one dispatch per ROUND instead of one per
+    drafted token, which is what makes drafting cheap: at serving batch
+    sizes the per-dispatch overhead of a small decode graph dwarfs its
+    compute, and plain per-step dispatching would cost as much as just
+    decoding with the target tier. ``run[B, width]`` is the token fed
+    at each step — ``[pending, d1 .. d_{width-1}]``, exactly the verify
+    step's input; the LAST step's output is discarded (that step exists
+    to write draft-KV at ``pos+width-1`` so a fully accepted round
+    leaves no hole in the draft cache). ``width`` is static: one
+    compilation per distinct round width.
+    """
+    api = api or get_model(setup.cfg)
+    cfg = setup.cfg
+    pctx = setup.pctx()
+
+    def draft(params, token, cache, pos, width):
+        def body(carry, j):
+            tok, c = carry
+            logits, c = api.decode_step(params, cfg, tok, c, pos + j, pctx=pctx)
+            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+            return (nxt, c), tok
+        (_, cache), fed = jax.lax.scan(body, (token, cache), jnp.arange(width))
+        return jnp.moveaxis(fed[:, :, 0], 0, 1), cache  # [B, width]
+
+    if setup.mesh is None:
+        return jax.jit(draft, static_argnums=(4,), donate_argnums=(2,))
+    mesh = setup.mesh
+    ap = _abstract_params(setup, api, aparams)
+    pspecs = shr.param_specs(ap, mesh)
+    acache = jax.eval_shape(lambda: api.init_cache(cfg, setup.batch, setup.max_len))
+    cspecs = shr.cache_specs_tree(acache, mesh, prefer_seq=setup.flash_decode)
+    tok_spec = shr.input_spec((setup.batch, 1), mesh)
+    return jax.jit(
+        draft,
+        static_argnums=(4,),
+        in_shardings=(
+            shr.named(mesh, pspecs),
+            NamedSharding(mesh, tok_spec),
+            shr.named(mesh, cspecs),
+            None,
+        ),
+        out_shardings=(NamedSharding(mesh, tok_spec), _cache_out(api, cfg, mesh, cspecs)),
+        donate_argnums=(2,),
+    )
+
+
+def build_verify_step(setup: ServeSetup, api: ModelApi | None = None, aparams: Any = None):
+    """Jitted speculative verify step (DESIGN.md §10).
+
+    ``verify(params, tokens[B, W], cache, pos[B]) ->
+    (vtok, acc, ptok, cache)`` runs ONE forward over a W-token run per
+    row — row ``b``'s tokens occupy positions ``pos[b] .. pos[b]+W-1``,
+    causally masked within the run — and fuses greedy selection,
+    acceptance counting, and next-pending-token selection:
+
+      * ``vtok[B, W]``: the verify tier's greedy token after each input
+        position (``vtok[:, i]`` is what the target model says follows
+        ``tokens[:, :i+1]``);
+      * ``acc[B]``: ``1 +`` the length of the matched drafted prefix
+        (``tokens[:, 1:]`` vs ``vtok[:, :-1]``), in ``1..W`` — the
+        number of target-greedy tokens this round proved per row;
+      * ``ptok[B, 1]``: ``vtok[b, acc[b]-1]`` — the last proven token,
+        i.e. the next round's pending input. (A request whose budget
+        clamps its advance below ``acc`` finishes this round, so its
+        stale pending entry is never decoded.)
+
+    Everything except the ``[B]`` ``acc`` fetch stays device-resident;
+    the engine's round loop syncs exactly once per round. One
+    compilation per distinct run width W (the engine clamps W near
+    capacity/budget boundaries, so a trace compiles a handful).
+    """
+    api = api or get_model(setup.cfg)
+    cfg = setup.cfg
+    pctx = setup.pctx()
+
+    def verify(params, tokens, cache, pos):
+        logits, cache = api.decode_step(params, cfg, tokens, cache, pos, pctx=pctx)
+        vtok = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # [B, W]
+        match = (tokens[:, 1:] == vtok[:, :-1]).astype(jnp.int32)
+        acc = (1 + jnp.sum(jnp.cumprod(match, axis=-1), axis=-1)).astype(jnp.int32)
+        ptok = jnp.take_along_axis(vtok, acc[:, None] - 1, axis=1)
+        return vtok, acc, ptok, cache
+
+    if setup.mesh is None:
+        return jax.jit(verify)
+    mesh = setup.mesh
+    ap = _abstract_params(setup, api, aparams)
+    pspecs = shr.param_specs(ap, mesh)
+    acache = jax.eval_shape(lambda: api.init_cache(cfg, setup.batch, setup.max_len))
+    cspecs = shr.cache_specs_tree(acache, mesh, prefer_seq=setup.flash_decode)
+    tok_spec = shr.input_spec((setup.batch, 1), mesh)
+    return jax.jit(
+        verify,
+        in_shardings=(
+            shr.named(mesh, pspecs),
+            NamedSharding(mesh, tok_spec),
+            shr.named(mesh, cspecs),
+            None,
+        ),
+        out_shardings=(
+            NamedSharding(mesh, tok_spec),
+            NamedSharding(mesh, P()),
+            NamedSharding(mesh, tok_spec),
+            _cache_out(api, cfg, mesh, cspecs),
+        ),
+        donate_argnums=(2,),
+    )
+
+
 # ---------------------------------------------------------------------------
 # Static reference path (the pre-engine loop, kept as baseline + fallback)
 # ---------------------------------------------------------------------------
@@ -302,6 +416,9 @@ def batch_generate(
     key: Array | None = None,
     flash_decode: bool = False,
     moe_impl: str | None = None,
+    draft_params: Any = None,
+    spec_k: int = 0,
+    spec_draft: str = "model",
 ) -> Array:
     """Generate for a batch of same-length prompts — the one routing
     point between the engine and the static loop.
@@ -312,18 +429,29 @@ def batch_generate(
     recurrent/enc-dec families take :func:`static_generate`. Both
     ``QuantizedModel.generate`` and the deprecated
     ``runtime.serve_loop.generate`` delegate here, so engine
-    eligibility lives in exactly one place.
+    eligibility lives in exactly one place. ``spec_k`` (self-speculative
+    decoding, DESIGN.md §10) requires engine eligibility — the static
+    loop has no draft/verify path.
     """
     b, s = batch["tokens"].shape
     if max_len is None:
         max_len = s + max_new_tokens + (cfg.frontend_tokens or 0)
-    if (
+    engine_ok = (
         greedy
         and key is None
         and cfg.family in ENGINE_FAMILIES
         and not cfg.frontend_tokens
         and "frontend" not in batch
-    ):
+    )
+    if (draft_params is not None or spec_k) and not engine_ok:
+        raise ValueError(
+            "speculative decoding runs on the slot engine, which takes greedy "
+            "keyless token-only requests for transformer families — this call "
+            f"(greedy={greedy}, key={'set' if key is not None else None}, "
+            f"family={cfg.family!r}) falls back to the static loop, which has "
+            "no draft/verify path"
+        )
+    if engine_ok:
         eng = ServeEngine(
             cfg,
             params,
@@ -332,6 +460,9 @@ def batch_generate(
             mesh=mesh,
             flash_decode=flash_decode,
             moe_impl=moe_impl,
+            draft_params=draft_params,
+            spec_k=spec_k,
+            spec_draft=spec_draft,
         )
         outs = eng.serve([(batch["tokens"][i], max_new_tokens) for i in range(b)])
         return jnp.asarray(np.stack(outs))
@@ -366,6 +497,29 @@ class ServeEngine:
       flash_decode: sequence-sharded flash-decoding cache layout (§Perf).
       monitor: a :class:`StragglerMonitor` (one is created by default);
         every decode step's wall-clock is recorded.
+      draft_params: optional second (aggressively low-bit, e.g. elp4)
+        tier of the SAME checkpoint. With ``spec_k`` set and
+        ``spec_draft="model"``, the engine decodes self-speculatively
+        (DESIGN.md §10): the draft tier drafts up to ``spec_k - 1``
+        tokens per round inside one scanned jit, then ``params`` — the
+        high-bit/float VERIFY tier, which defines the output — checks
+        the whole run in one ``spec_k``-wide forward. Output is
+        token-identical to serving ``params`` non-speculatively, by
+        construction.
+      spec_k: speculative verify width W >= 2 (run length per round =
+        W; drafted tokens verified per round = W - 1). 0 disables.
+      spec_draft: the draft source. ``"model"`` decodes drafts with
+        ``draft_params`` — the paper-faithful mode, fastest where the
+        low-bit tier's forward is genuinely cheaper than the verify
+        tier's (accelerators whose decode is weight-bandwidth-bound).
+        ``"ngram"`` drafts by token-recycling prompt lookup: the engine
+        remembers, across its whole lifetime, which VERIFIED token
+        followed each token and replays those chains — drafting costs
+        no forward at all, so a round is ONE wide verify dispatch (the
+        fast mode on dispatch/op-overhead-bound hosts, e.g. a CPU CI
+        runner, where any sequential draft loop costs as much per step
+        as the target tier). Either way acceptance only modulates
+        SPEED; the verify tier makes the output stream identical.
     """
 
     def __init__(
@@ -380,6 +534,9 @@ class ServeEngine:
         flash_decode: bool = False,
         moe_impl: str | None = None,
         monitor: StragglerMonitor | None = None,
+        draft_params: Any = None,
+        spec_k: int = 0,
+        spec_draft: str = "model",
     ):
         if cfg.family not in ENGINE_FAMILIES:
             raise ValueError(
@@ -391,6 +548,35 @@ class ServeEngine:
             raise ValueError(
                 "ServeEngine requests are token-only; frontend (vlm/audio) prompts "
                 "serve through repro.serve.static_generate"
+            )
+        self.spec_k = int(spec_k)
+        self.spec_draft = str(spec_draft)
+        if self.spec_draft not in ("model", "ngram"):
+            raise ValueError(
+                f'spec_draft must be "model" or "ngram", got {self.spec_draft!r}'
+            )
+        if self.spec_k == 0:
+            if draft_params is not None:
+                raise ValueError(
+                    "draft_params without spec_k: speculative serving takes the "
+                    "draft tier AND the verify width (spec_k >= 2), or neither"
+                )
+        elif self.spec_k < 2:
+            raise ValueError(
+                f"spec_k is the verify width: need >= 2 (got {self.spec_k}) — width 1 "
+                "verifies nothing and is strictly slower than plain decode"
+            )
+        elif self.spec_draft == "model" and draft_params is None:
+            raise ValueError(
+                'spec_draft="model" drafts with a second weight tier — pass '
+                'draft_params, or draft from the token history with '
+                'spec_draft="ngram"'
+            )
+        elif self.spec_draft == "ngram" and draft_params is not None:
+            raise ValueError(
+                'spec_draft="ngram" drafts from the engine\'s verified token '
+                "history, not a weight tier — drop draft_params or use "
+                'spec_draft="model"'
             )
         if mesh == "auto":
             from repro.runtime.elastic import make_mesh
@@ -424,6 +610,36 @@ class ServeEngine:
             )
             cache = jax.device_put(cache, shr.named(mesh, cspecs))
         self._cache = cache
+        # speculative state: the verify step always runs on the target
+        # params. A "model" drafter additionally gets its own jitted
+        # prefill/draft-run pair and its OWN cache (same geometry, same
+        # sharding rules — both tiers coexist on the mesh); an "ngram"
+        # drafter gets a vocab-sized transition table (which verified
+        # token last followed each token, engine-wide) plus the host
+        # copy of each slot's pending token the lookup chains from.
+        self.draft_params = draft_params
+        if self.spec_k:
+            self._verify = build_verify_step(self.setup, self._api, aparams=aparams)
+            self._spec_width = self.spec_k
+            if self.spec_draft == "model":
+                adraft = jax.eval_shape(lambda: draft_params)
+                if mesh is not None:
+                    from repro.runtime.elastic import reshard
+
+                    self.draft_params = reshard(
+                        draft_params, mesh, shr.param_specs(adraft, mesh)
+                    )
+                self._draft_prefill = build_slot_prefill(
+                    self.setup, self._api, aparams=adraft
+                )
+                self._draft_run = build_draft_run(self.setup, self._api, aparams=adraft)
+                dcache = self._api.init_cache(cfg, n_slots, max_len)
+                if mesh is not None:
+                    dcache = jax.device_put(dcache, shr.named(mesh, cspecs))
+                self._draft_cache = dcache
+            else:
+                self._ngram = np.full(cfg.vocab, -1, np.int32)
+                self._pending = np.zeros(n_slots, np.int32)
         self.monitor = monitor or StragglerMonitor()
         self._sched = SlotScheduler(n_slots)
         self._requests: dict[int, Request] = {}
@@ -440,6 +656,9 @@ class ServeEngine:
         self._tokens_generated = 0
         self._completed = 0
         self._truncated = 0
+        self._spec_rounds = 0
+        self._tokens_drafted = 0
+        self._tokens_accepted = 0
 
     # -- request lifecycle ---------------------------------------------------
     def submit(self, tokens, max_new_tokens: int, *, key=None) -> int:
@@ -449,10 +668,18 @@ class ServeEngine:
             raise ValueError("empty prompt")
         if max_new_tokens < 1:
             raise ValueError(f"max_new_tokens must be >= 1, got {max_new_tokens}")
-        if prompt.size > self.setup.max_len:
+        if prompt.size + max_new_tokens > self.setup.max_len:
             raise ValueError(
-                f"prompt of {prompt.size} tokens exceeds the engine's per-slot "
-                f"cache capacity max_len={self.setup.max_len}"
+                f"request needs {prompt.size} prompt + {max_new_tokens} new tokens "
+                f"= {prompt.size + int(max_new_tokens)} cache positions, but the "
+                f"engine's per-slot capacity is max_len={self.setup.max_len} — "
+                "raise max_len or lower max_new_tokens (decoding past capacity "
+                "would wrap into neighbouring positions)"
+            )
+        if key is not None and self.spec_k:
+            raise ValueError(
+                "speculative serving is greedy-only (acceptance compares argmax "
+                "streams); submit sampled requests to a non-speculative engine"
             )
         rid = self._next_rid
         self._next_rid += 1
@@ -510,7 +737,26 @@ class ServeEngine:
                 self.params, jnp.asarray(req.prompt[None]), self._cache, jnp.int32(slot)
             )
             self._prefills += 1
-            if req.key is None:
+            if self.spec_k and self.spec_draft == "model":
+                # the draft tier keeps its own cache in lockstep: same
+                # prompt, same slot. Its prefill logits are discarded —
+                # every EMITTED token, including the prefill token below,
+                # comes from the verify tier, which is what makes the
+                # output token-identical to non-speculative serving.
+                _, self._draft_cache = self._draft_prefill(
+                    self.draft_params,
+                    jnp.asarray(req.prompt[None]),
+                    self._draft_cache,
+                    jnp.int32(slot),
+                )
+            if req.key is None and self.spec_k and self.spec_draft == "ngram":
+                # the lookup drafter chains from the pending token's
+                # VALUE, so admission syncs it (one scalar fetch riding
+                # the prefill dispatch it already paid for)
+                first = int(np.asarray(jnp.argmax(logits, axis=-1))[0])
+                req.out.append(first)
+                self._pending[slot] = first
+            elif req.key is None:
                 first = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # [1], device
                 req.out.append((first, 0))
                 self._tok_dev = self._tok_dev.at[slot, 0].set(first[0])
@@ -524,6 +770,10 @@ class ServeEngine:
             progressed = True
 
         live = self._sched.live
+        if live and self.spec_k:
+            self._spec_round(live)
+            self.steps += 1
+            return True
         if live:
             # hand the dispatch its OWN copy of the position vector:
             # jnp.asarray can zero-copy-alias a host numpy buffer on
@@ -607,8 +857,15 @@ class ServeEngine:
 
     # -- introspection -------------------------------------------------------
     def stats(self) -> dict:
-        """Serving counters + the straggler monitor's slow-step report."""
-        return {
+        """Serving counters + the straggler monitor's slow-step report.
+
+        Under speculative serving the dict gains a ``"speculative"``
+        sub-dict (drafted/accepted counts and the aggregate acceptance
+        rate), and the same acceptance fields are folded into the
+        ``"straggler"`` report — a slow round and a rejected round look
+        identical in wall-clock, so the two diagnostics read together.
+        """
+        st = {
             "steps": self.steps,
             "decode_steps": self._decode_steps,
             "prefills": self._prefills,
@@ -620,6 +877,28 @@ class ServeEngine:
             "mesh": dict(self.mesh.shape) if self.mesh is not None else None,
             "straggler": self.monitor.report(),
         }
+        if self.spec_k:
+            rate = (
+                self._tokens_accepted / self._tokens_drafted
+                if self._tokens_drafted
+                else 1.0
+            )
+            spec = {
+                "spec_k": self.spec_k,
+                "drafter": self.spec_draft,
+                "rounds": self._spec_rounds,
+                "tokens_drafted": self._tokens_drafted,
+                "tokens_accepted": self._tokens_accepted,
+                "acceptance_rate": rate,
+            }
+            st["speculative"] = spec
+            st["straggler"] = {
+                **st["straggler"],
+                "tokens_drafted": self._tokens_drafted,
+                "tokens_accepted": self._tokens_accepted,
+                "acceptance_rate": rate,
+            }
+        return st
 
     def decode_cost(self) -> dict:
         """HLO cost (FLOPs / bytes / collectives) of the compiled greedy
@@ -637,6 +916,122 @@ class ServeEngine:
         return compiled_cost(lowered.compile())
 
     # -- internals -----------------------------------------------------------
+    def _spec_round(self, live: dict[int, Request]) -> None:
+        """One speculative draft/verify round (DESIGN.md §10).
+
+        Round width ``W`` is the adaptive target (below) clamped so no
+        live slot's writes run past its cache capacity, and shrunk to
+        the largest remaining budget (no point drafting 7 when every
+        live request wants <= 2 more tokens). A "model" round is
+        exactly TWO dispatches — the scanned W-step draft loop
+        (:func:`build_draft_run`) producing the run ``[pending, d1 ..
+        d_{W-1}]``, then the W-wide verify forward on the target tier
+        fusing greedy selection, acceptance counting and pending-token
+        choice. An "ngram" round builds the run on the host (a walk of
+        the engine's verified-transition table from each slot's pending
+        token) and is ONE dispatch, the verify forward. Either way the
+        loop syncs the ``[B]`` ``acc`` vector once per round (the ngram
+        round also pulls the small ``[B, W]`` verified-token matrix: it
+        both feeds the table and lets outputs resolve without touching
+        the device again).
+
+        Width adapts AIMD-style: a fully-accepted round widens the next
+        target by one (up to ``spec_k``), a round accepting under half
+        its width drops the target to just past what was accepted. Cold
+        ngram tables and chaotic draft tiers therefore cost about a
+        plain wide-2 decode per round instead of a full-width miss, and
+        recovery back to ``spec_k`` takes a handful of good rounds —
+        width never changes WHAT is emitted, only how much is risked
+        per round, so output identity is untouched.
+
+        Rollback is free: a slot that accepted ``take < W`` tokens just
+        advances ``pos`` by ``take`` — the rejected suffix positions
+        hold garbage in the cache(s), but the mask-past-pos contract
+        plus write-before-attend ordering means the next round
+        overwrites them before anything reads them (the same argument
+        that makes slot reuse safe). Free slots ride along at ``pos=0``
+        with their writes masked the same way.
+        """
+        pos_np = np.array(self._pos)
+        width = max(
+            1,
+            min(
+                self._spec_width,
+                min(int(self.setup.max_len - pos_np[s]) for s in live),
+                max(r.remaining for r in live.values()),
+            ),
+        )
+        pos = jnp.asarray(pos_np)
+        t0 = time.perf_counter()
+        if self.spec_draft == "model":
+            run, self._draft_cache = self._draft_run(
+                self.draft_params, self._tok_dev, self._draft_cache, pos, width
+            )
+        else:
+            run = jnp.asarray(self._ngram_run(live, width))
+        vtok, acc, ptok, self._cache = self._verify(self.params, run, self._cache, pos)
+        if self.spec_draft == "model":
+            self._tok_dev = ptok
+        # dispatch-clocked like the plain path: one record per round
+        self.monitor.record(time.perf_counter() - t0)
+        acc_np = np.asarray(acc)  # the round's one blocking sync
+        vtok_np = np.asarray(vtok) if self.spec_draft == "ngram" else None
+        acc_sum = 0
+        n_live = len(live)  # snapshot: _maybe_finish pops from live
+        for slot, req in list(live.items()):
+            a = int(acc_np[slot])
+            acc_sum += a
+            if vtok_np is None:
+                take = req.advance(vtok, slot, width, a)
+            else:
+                take = min(a, req.remaining)
+                req.out.extend(int(t) for t in vtok_np[slot, :take])
+                # every transition inside the accepted run is a VERIFIED
+                # greedy step of the target tier — teach the table all of
+                # them (pending -> v0 -> ... -> v_{a-1})
+                chain = np.concatenate(
+                    ([self._pending[slot]], vtok_np[slot, :a])
+                ).astype(np.int64)
+                self._ngram[chain[:-1]] = chain[1:]
+                self._pending[slot] = int(vtok_np[slot, a - 1])
+            req.drafted += width - 1
+            req.accepted += a - 1
+            self._tokens_drafted += width - 1
+            self._tokens_accepted += a - 1
+            self._tokens_generated += take
+            self._pos[slot] += take
+            self._maybe_finish(slot, req)
+        mean_a = acc_sum / n_live
+        if mean_a >= width:
+            self._spec_width = min(self.spec_k, max(self._spec_width, width + 1))
+        elif mean_a < width / 2:
+            self._spec_width = max(2, int(mean_a) + 1)
+        self._spec_rounds += 1
+        # W draft steps + 1 verify forward, or just the verify forward
+        self._decode_steps += (width + 1) if self.spec_draft == "model" else 1
+
+    def _ngram_run(self, live: dict[int, Request], width: int) -> np.ndarray:
+        """Token-recycling draft run: walk the verified-transition table.
+
+        Row ``slot`` is ``[pending, t1 .. t_{width-1}]`` where each
+        ``t_j`` is what last followed ``t_{j-1}`` in ANY verified stream
+        this engine produced (prompt-lookup generalized across requests
+        and engine lifetime). An unseen token repeats — a draft that is
+        almost surely rejected, which the width controller then prices
+        in. Rows of free slots stay zero; their cache writes are masked
+        like any other past-pos garbage.
+        """
+        run = np.zeros((self._sched.n_slots, width), np.int32)
+        for slot in live:
+            t = int(self._pending[slot])
+            run[slot, 0] = t
+            for j in range(1, width):
+                nxt = int(self._ngram[t])
+                if nxt >= 0:
+                    t = nxt
+                run[slot, j] = t
+        return run
+
     def _select(self, req: Request, logits_row: np.ndarray) -> int:
         if req.key is None:
             return int(np.argmax(logits_row))

@@ -31,11 +31,21 @@ import numpy as np
 class Request:
     """One generation request and its accumulated output.
 
-    ``out`` entries are ints (sampled path) or lazy ``(vector, row)``
-    pairs — a device token vector from one greedy decode/prefill step
-    plus this request's row in it. Laziness is what keeps the greedy
-    decode loop device-resident (no per-step host sync); entries are
-    resolved to ints on the first :meth:`tokens` call.
+    ``out`` entries are ints (sampled path) or lazy ``(array, flat_idx)``
+    pairs — a device token array from one greedy decode/prefill/verify
+    step plus this request's flat index into it (row for a ``[B]``
+    vector; ``row * width + col`` for a ``[B, width]`` verify matrix).
+    Laziness is what keeps the greedy decode loop device-resident (no
+    per-step host sync); entries are resolved to ints on the first
+    :meth:`tokens` call.
+
+    Under speculative serving (DESIGN.md §10) a request advances a
+    VARIABLE number of tokens per engine step; ``drafted`` counts the
+    draft-tier tokens submitted for verification on its behalf and
+    ``accepted`` the ones the verify tier confirmed matched its own
+    greedy stream, so per-request acceptance is observable
+    (``accepted / drafted`` — a model-agreement metric, deliberately
+    not clamped by the request's remaining token budget).
     """
 
     rid: int
@@ -46,10 +56,26 @@ class Request:
     slot: int | None = None
     done: bool = False
     truncated: bool = False
+    drafted: int = 0
+    accepted: int = 0
 
     @property
     def remaining(self) -> int:
         return self.max_new_tokens - len(self.out)
+
+    def advance(self, arr: Any, row: int, width: int, n: int) -> int:
+        """Append up to ``n`` lazily-resolved tokens from row ``row`` of
+        the ``[B, width]`` token matrix ``arr``.
+
+        Returns how many were actually taken: the advance is clamped to
+        ``remaining``, so a drafted run crossing ``max_new_tokens``
+        truncates instead of overshooting the request's budget.
+        """
+        take = min(int(n), self.remaining)
+        base = row * width
+        for i in range(take):
+            self.out.append((arr, base + i))
+        return take
 
     def tokens(self) -> np.ndarray:
         resolved = [

@@ -156,13 +156,18 @@ def test_slot_reuse_after_finish_and_evict_is_clean(params):
     np.testing.assert_array_equal(eng2.result(rid2), want)
 
 
-def test_capacity_truncation(params):
+def test_capacity_overflow_rejected_at_submit(params):
+    # A request that cannot fit prompt + max_new in the slot cache is a
+    # caller error, rejected up front (it used to truncate silently).
     eng = ServeEngine(CFG, params, n_slots=1, max_len=16, mesh=None)
-    (out,) = eng.serve([(_prompts((12,))[0], 50)])
-    assert out.size == 16 - 12 + 1  # one from prefill + decodes to capacity
-    assert eng.stats()["requests_truncated"] == 1
-    with pytest.raises(ValueError, match="cache capacity"):
+    with pytest.raises(ValueError, match="per-slot capacity"):
+        eng.submit(_prompts((12,))[0], 50)
+    with pytest.raises(ValueError, match="per-slot capacity"):
         eng.submit(np.zeros(17, np.int32), 1)
+    # exactly filling the slot is fine and is not counted as truncation
+    (out,) = eng.serve([(_prompts((12,))[0], 4)])
+    assert out.size == 4
+    assert eng.stats()["requests_truncated"] == 0
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,375 @@
+"""Self-speculative decoding in the serve engine (DESIGN.md §10).
+
+Covers the whole stack: the K-wide verify forward at the model level
+(one wide ``decode_step`` must produce the same logits as K sequential
+steps, dense-dot and flash cache layouts), the engine's draft/verify
+round loop for BOTH drafters (``"model"``: a second weight tier in a
+scanned draft loop; ``"ngram"``: the engine-lifetime token-recycling
+table), token identity against per-request static generation under
+slot reuse / eviction / staggered admission / budget-crossing rounds,
+the constructor and submit guard rails, the ``QuantScheme.speculative``
+artifact (JSON round trip, dual-tier save/load), and 4-fake-device
+SPMD parity in a subprocess.
+
+Everything here asserts EXACT token identity: speculation is a latency
+optimization, never an output change — the verify tier alone defines
+what is emitted.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ArchConfig
+from repro.serve import ServeEngine, ServeSetup, static_generate
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+CFG = ArchConfig(
+    name="spec-t", family="dense", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=2, d_ff=128, vocab=128, head_dim=16, dtype_str="float32",
+)
+
+
+@pytest.fixture(scope="module")
+def params():
+    from repro.models import get_model
+
+    return get_model(CFG).init_params(CFG, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def draft_params(params):
+    from repro import api
+
+    return api.quantize(CFG, params, api.QuantScheme(fmt="elp4")).params
+
+
+def _prompts(sizes, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, CFG.vocab, size=s).astype(np.int32) for s in sizes]
+
+
+def _static_ref(p, prompt, max_new):
+    setup = ServeSetup(cfg=CFG, mesh=None, max_len=prompt.size + max_new, batch=1)
+    return np.asarray(
+        static_generate(setup, p, {"tokens": jnp.asarray(prompt[None])}, max_new)
+    )[0]
+
+
+def _assert_parity(outs, reqs, p, tag=""):
+    for i, (got, (prompt, n)) in enumerate(zip(outs, reqs)):
+        want = _static_ref(p, prompt, n)
+        np.testing.assert_array_equal(got, want, err_msg=f"{tag} req {i}")
+
+
+# ---------------------------------------------------------------------------
+# Model level: one W-wide forward == W sequential single-token steps
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("flash", [False, True])
+def test_wide_decode_matches_sequential(params, flash):
+    """The verify forward's correctness root: feeding a W-token run at
+    per-row position vectors through one ``decode_step`` yields the same
+    logits (all W positions) as feeding the same tokens one at a time —
+    rows at DIFFERENT positions, dense-dot and flash cache layouts."""
+    from repro.models import get_model
+
+    model = get_model(CFG)
+    setup = ServeSetup(cfg=CFG, mesh=None, max_len=32, batch=2, flash_decode=flash)
+    from repro.serve import build_serve_fns
+
+    prefill, decode = build_serve_fns(setup, model)
+    toks = jnp.asarray(np.stack(_prompts((10, 10), seed=3)))
+    cache_a = model.init_cache(CFG, 2, 32)
+    logits, cache_a = prefill(params, {"tokens": toks}, cache_a)
+    cache_b = jax.tree.map(lambda a: a + 0, cache_a)
+
+    W = 4
+    rng = np.random.default_rng(5)
+    run = jnp.asarray(rng.integers(0, CFG.vocab, size=(2, W)).astype(np.int32))
+    # row 0 decodes from position 10, row 1 pretends it is at 10 as well
+    # for the sequential leg but the wide leg gets a VECTOR of positions
+    pos = jnp.asarray(np.array([10, 10], np.int32))
+
+    seq_logits = []
+    for j in range(W):
+        lj, cache_a = decode(params, run[:, j : j + 1], cache_a, pos + j)
+        seq_logits.append(np.asarray(lj[:, 0]))
+    seq_logits = np.stack(seq_logits, axis=1)  # [B, W, vocab]
+
+    wide, _ = decode(params, run, cache_b, pos)
+    np.testing.assert_allclose(np.asarray(wide), seq_logits, atol=1e-4, rtol=1e-4)
+
+
+def test_wide_decode_masks_stale_kv_past_pos(params):
+    """The rollback contract at the model level: a row whose cache holds
+    STALE KV beyond its ``pos`` (a rejected draft suffix, in engine
+    terms) must decode as if those positions were never written —
+    write-before-attend + mask-past-pos — independent of a neighbour row
+    at a different offset."""
+    from repro.models import get_model
+    from repro.serve import build_serve_fns
+
+    model = get_model(CFG)
+    setup = ServeSetup(cfg=CFG, mesh=None, max_len=32, batch=2)
+    prefill, decode = build_serve_fns(setup, model)
+    p = _prompts((6,), seed=7)[0]
+    run = jnp.asarray(_prompts((3,), seed=9)[0][None])
+
+    # reference: the row alone, exactly 6 tokens of history
+    c1 = model.init_cache(CFG, 1, 32)
+    _, c1 = prefill(params, {"tokens": jnp.asarray(p[None])}, c1)
+    want, _ = decode(params, run, c1, jnp.asarray(np.array([6], np.int32)))
+
+    # shared cache: row 0 prefilled with 12 tokens whose first 6 are p,
+    # so positions 6..11 hold stale KV; row 1 is a neighbour at offset 12
+    stale = np.concatenate([p, _prompts((6,), seed=10)[0]])
+    other = _prompts((12,), seed=12)[0]
+    c2 = model.init_cache(CFG, 2, 32)
+    _, c2 = prefill(params, {"tokens": jnp.asarray(np.stack([stale, other]))}, c2)
+    runs = jnp.concatenate([run, run], axis=0)
+    got, _ = decode(params, runs, c2, jnp.asarray(np.array([6, 12], np.int32)))
+    np.testing.assert_allclose(
+        np.asarray(got[0]), np.asarray(want[0]), atol=1e-4, rtol=1e-4
+    )
+
+
+# ---------------------------------------------------------------------------
+# Engine: draft/verify rounds are token-identical, both drafters
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("spec_k", [2, 5])
+def test_model_draft_engine_parity(params, draft_params, spec_k):
+    reqs = list(zip(_prompts((8, 16, 5), seed=11), (9, 6, 12)))
+    eng = ServeEngine(
+        CFG, params, n_slots=2, max_len=64, mesh=None,
+        draft_params=draft_params, spec_k=spec_k,
+    )
+    outs = eng.serve(reqs)
+    _assert_parity(outs, reqs, params, f"model k={spec_k}")
+    st = eng.stats()["speculative"]
+    assert st["drafter"] == "model" and st["spec_k"] == spec_k
+    assert st["rounds"] > 0 and st["tokens_drafted"] > 0
+    assert 0.0 <= st["acceptance_rate"] <= 1.0
+
+
+def test_ngram_draft_engine_parity_with_slot_reuse(params):
+    """Random-init model: the ngram table is nearly always wrong, so
+    almost every round rolls back — identity must hold anyway, across
+    slot reuse (4 requests on 2 slots)."""
+    reqs = list(zip(_prompts((8, 14, 6, 10), seed=13), (8, 5, 10, 7)))
+    eng = ServeEngine(
+        CFG, params, n_slots=2, max_len=64, mesh=None,
+        spec_k=5, spec_draft="ngram",
+    )
+    outs = eng.serve(reqs)
+    _assert_parity(outs, reqs, params, "ngram")
+    st = eng.stats()["speculative"]
+    assert st["drafter"] == "ngram" and st["tokens_drafted"] > 0
+
+
+def test_spec_engine_flash_decode_parity(params, draft_params):
+    reqs = list(zip(_prompts((8, 12), seed=15), (7, 5)))
+    eng = ServeEngine(
+        CFG, params, n_slots=2, max_len=64, mesh=None,
+        draft_params=draft_params, spec_k=4, flash_decode=True,
+    )
+    _assert_parity(eng.serve(reqs), reqs, params, "flash")
+
+
+# ---------------------------------------------------------------------------
+# Variable-advance edge cases
+# ---------------------------------------------------------------------------
+def test_draft_run_crossing_budget_truncates(params, draft_params):
+    """max_new below the verify width: the round's advance is clamped
+    to the request budget — exactly max_new tokens come out, matching
+    static generation (no overshoot from accepted-but-unbudgeted
+    drafts)."""
+    for max_new in (1, 2, 3):
+        reqs = [(p, max_new) for p in _prompts((8, 12), seed=17)]
+        eng = ServeEngine(
+            CFG, params, n_slots=2, max_len=64, mesh=None,
+            draft_params=draft_params, spec_k=7,
+        )
+        outs = eng.serve(reqs)
+        assert all(o.size == max_new for o in outs)
+        _assert_parity(outs, reqs, params, f"budget max_new={max_new}")
+
+
+def test_all_slots_busy_admission(params, draft_params):
+    """More requests than slots with staggered arrivals: later requests
+    wait in the queue mid-draft-round and are admitted the step a slot
+    frees — identity holds for every request."""
+    for spec_draft, dp in (("model", draft_params), ("ngram", None)):
+        reqs = list(zip(_prompts((8, 10, 6, 12, 7), seed=19), (6, 8, 10, 4, 9)))
+        eng = ServeEngine(
+            CFG, params, n_slots=2, max_len=64, mesh=None,
+            draft_params=dp, spec_k=4, spec_draft=spec_draft,
+        )
+        outs = eng.serve(reqs, arrivals=[0, 0, 1, 2, 4])
+        _assert_parity(outs, reqs, params, f"busy {spec_draft}")
+
+
+def test_eviction_and_readmission_mid_draft(params, draft_params):
+    """Evicting a live request mid-run frees the slot with no cleanup;
+    the next occupant's rounds must not see the evictee's stale KV or
+    pending state (mask-past-pos + prefill overwrite)."""
+    for spec_draft, dp in (("model", draft_params), ("ngram", None)):
+        prompts = _prompts((8, 10), seed=21)
+        eng = ServeEngine(
+            CFG, params, n_slots=1, max_len=64, mesh=None,
+            draft_params=dp, spec_k=4, spec_draft=spec_draft,
+        )
+        rid = eng.submit(prompts[0], 30)
+        for _ in range(3):
+            eng.step()
+        partial = eng.evict(rid)
+        want_full = _static_ref(params, prompts[0], 30)
+        # whatever was emitted before eviction is a prefix of the
+        # target-greedy stream (verify defines every emitted token)
+        assert partial.size < 30
+        np.testing.assert_array_equal(partial, want_full[: partial.size])
+        rid2 = eng.submit(prompts[1], 7)
+        eng.run()
+        np.testing.assert_array_equal(
+            eng.result(rid2), _static_ref(params, prompts[1], 7)
+        )
+
+
+# ---------------------------------------------------------------------------
+# Guard rails
+# ---------------------------------------------------------------------------
+def test_ctor_validation(params, draft_params):
+    with pytest.raises(ValueError, match="verify width"):
+        ServeEngine(CFG, params, mesh=None, draft_params=draft_params, spec_k=1)
+    with pytest.raises(ValueError, match="without spec_k"):
+        ServeEngine(CFG, params, mesh=None, draft_params=draft_params)
+    with pytest.raises(ValueError, match="draft_params"):
+        ServeEngine(CFG, params, mesh=None, spec_k=4)
+    with pytest.raises(ValueError, match="not a weight tier"):
+        ServeEngine(
+            CFG, params, mesh=None,
+            draft_params=draft_params, spec_k=4, spec_draft="ngram",
+        )
+    with pytest.raises(ValueError, match="spec_draft"):
+        ServeEngine(CFG, params, mesh=None, spec_k=4, spec_draft="bogus")
+
+
+def test_sampled_requests_rejected(params, draft_params):
+    eng = ServeEngine(
+        CFG, params, n_slots=1, max_len=32, mesh=None,
+        draft_params=draft_params, spec_k=4,
+    )
+    with pytest.raises(ValueError, match="greedy-only"):
+        eng.submit(_prompts((8,))[0], 4, key=jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# repro.api artifact: QuantScheme.speculative, dual tier, save/load
+# ---------------------------------------------------------------------------
+def test_scheme_json_roundtrip():
+    from repro import api
+
+    for drafter in ("model", "ngram"):
+        s = api.QuantScheme.speculative(draft="elp4", K=6, drafter=drafter)
+        s2 = api.QuantScheme.from_json(s.to_json())
+        assert s2 == s
+        assert s2.spec_k == 6 and s2.spec_draft == drafter
+    with pytest.raises(ValueError, match="spec_draft"):
+        api.QuantScheme(fmt="elp4", spec_verify="float", spec_k=4, spec_draft="nope")
+    with pytest.raises(ValueError, match="BOTH"):
+        api.QuantScheme(fmt="elp4", spec_k=4)
+
+
+def test_speculative_artifact_generate_serve_and_save_load(params, tmp_path):
+    from repro import api
+
+    scheme = api.QuantScheme.speculative(draft="elp4", K=4)
+    qm = api.quantize(CFG, params, scheme)
+    assert qm.verify_params is not None
+
+    prompts = _prompts((8, 8), seed=23)
+    batch = {"tokens": jnp.asarray(np.stack(prompts))}
+    # generate/serve emit the VERIFY tier's stream (float here), not the
+    # draft tier's
+    got = np.asarray(qm.generate(batch, max_new_tokens=6))
+    for row, p in zip(got, prompts):
+        np.testing.assert_array_equal(row, _static_ref(params, p, 6))
+    reqs = list(zip(prompts, (6, 4)))
+    _assert_parity(qm.serve(reqs, n_slots=2, max_len=32), reqs, params, "api")
+
+    qm.save(str(tmp_path / "spec_artifact"))
+    qm2 = api.load(str(tmp_path / "spec_artifact"))
+    assert qm2.scheme == scheme and qm2.verify_params is not None
+    np.testing.assert_array_equal(
+        np.asarray(qm2.generate(batch, max_new_tokens=6)), got
+    )
+
+
+# ---------------------------------------------------------------------------
+# Multi-device: 4 fake CPU devices, sharded draft + verify tiers
+# ---------------------------------------------------------------------------
+def run_in_subprocess(body: str) -> str:
+    script = (
+        "import os\n"
+        'os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"\n'
+        + textwrap.dedent(body)
+    )
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run(
+        [sys.executable, "-c", script],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=560,
+        cwd=REPO,
+    )
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr[-3000:]}"
+    return out.stdout
+
+
+def test_multi_device_speculative_parity():
+    """On a fake 4-device mesh both drafters serve token-identically to
+    single-device static generation: the draft tier, verify tier, and
+    both caches live sharded; acceptance/rollback sync only the [B]
+    acceptance vector per round."""
+    run_in_subprocess(
+        """
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs.base import ArchConfig
+        from repro import api as front
+        from repro.serve import ServeEngine, ServeSetup, static_generate
+        from repro.models import get_model
+
+        CFG = ArchConfig(name="spec-md", family="dense", n_layers=2, d_model=64,
+                         n_heads=4, n_kv_heads=2, d_ff=128, vocab=128,
+                         head_dim=16, dtype_str="float32")
+        params = get_model(CFG).init_params(CFG, jax.random.PRNGKey(0))
+        draft = front.quantize(CFG, params, front.QuantScheme(fmt="elp4")).params
+        rng = np.random.default_rng(0)
+        prompts = [rng.integers(0, 128, size=s).astype(np.int32) for s in (8, 16, 6)]
+        news = (8, 5, 9)
+
+        def ref(p, n):
+            setup = ServeSetup(cfg=CFG, mesh=None, max_len=p.size + n, batch=1)
+            return np.asarray(static_generate(
+                setup, params, {"tokens": jnp.asarray(p[None])}, n))[0]
+
+        assert jax.device_count() == 4
+        for spec_draft, dp in (("model", draft), ("ngram", None)):
+            eng = ServeEngine(CFG, params, n_slots=2, max_len=64, mesh="auto",
+                              draft_params=dp, spec_k=4, spec_draft=spec_draft)
+            assert eng.stats()["mesh"] == {"data": 1, "model": 4}
+            outs = eng.serve(list(zip(prompts, news)), arrivals=[0, 0, 2])
+            for got, (p, n) in zip(outs, zip(prompts, news)):
+                want = ref(p, n)
+                assert np.array_equal(got, want), (spec_draft, got, want)
+            st = eng.stats()["speculative"]
+            assert st["tokens_drafted"] > 0
+            print(spec_draft, "parity OK, acceptance", st["acceptance_rate"])
+        """
+    )
