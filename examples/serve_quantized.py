@@ -24,6 +24,11 @@ token-identical to its own static generation on the verify tier; any
 drift is a hard failure (non-zero exit), which is how CI's
 examples-smoke gate consumes this script on 4 fake devices.
 
+``--metrics-out PATH`` records the whole run — train-step times and the
+serve legs' TTFT/ITL/energy — into one obs registry (DESIGN.md §11)
+and writes the schema-versioned snapshot to PATH; CI validates it with
+``python -m repro.obs --validate``.
+
 Run:  PYTHONPATH=src:. python examples/serve_quantized.py [--speculative]
       SERVE_DEMO_STEPS=60 ... (smaller training budget, e.g. CI smoke)
 """
@@ -38,6 +43,7 @@ import numpy as np
 from repro import api
 from repro.configs.base import ArchConfig
 from repro.data.pipeline import LmDataset
+from repro.obs import Registry, write_snapshot
 from repro.runtime.train_loop import TrainSetup, train
 from repro.serve import ServeSetup, static_generate
 
@@ -55,7 +61,7 @@ CFG = ArchConfig(
 )
 
 
-def speculative_main(params) -> None:
+def speculative_main(params, metrics=None) -> None:
     """--speculative: draft/verify serving, hard-failing on any drift."""
     ds = LmDataset(CFG, seq_len=32, batch=4, seed=9)
     base = np.asarray(ds.np_batch(0)["tokens"])
@@ -77,7 +83,7 @@ def speculative_main(params) -> None:
             f"speculative serving ({drafter} drafter, K={scheme.spec_k}) on "
             f"{jax.device_count()} device(s) ..."
         )
-        outs = qm.serve(reqs, n_slots=2, max_len=64)
+        outs = qm.serve(reqs, n_slots=2, max_len=64, metrics=metrics)
         ok = True
         for i, (got, want) in enumerate(zip(outs, refs)):
             match = bool(np.array_equal(np.asarray(got), want))
@@ -101,7 +107,14 @@ def main() -> None:
         action="store_true",
         help="serve draft/verify rounds (both drafters) and hard-fail on drift",
     )
+    ap.add_argument(
+        "--metrics-out",
+        default=None,
+        metavar="PATH",
+        help="write the run's obs snapshot (train + serve telemetry) to PATH",
+    )
     args = ap.parse_args()
+    metrics = Registry(enabled=True) if args.metrics_out else None
     steps = int(os.environ.get("SERVE_DEMO_STEPS", "150"))
     print(f"training a small LM on the synthetic stream ({steps} steps) ...")
     out = train(
@@ -110,11 +123,15 @@ def main() -> None:
         batch_size=16,
         seq_len=64,
         log_every=50,
+        metrics=metrics,
     )
     params = out["params"]
 
     if args.speculative:
-        speculative_main(params)
+        speculative_main(params, metrics=metrics)
+        if args.metrics_out:
+            write_snapshot(metrics, args.metrics_out)
+            print(f"metrics snapshot -> {args.metrics_out}")
         return
 
     print("converting matmul weights to packed ELP_BSD (4b) via repro.api ...")
@@ -146,7 +163,7 @@ def main() -> None:
     print(f"continuous-batching engine on {jax.device_count()} device(s) ...")
     base = np.asarray(prompts["tokens"])
     reqs = [(base[0, :8], 12), (base[1, :16], 10), (base[2, :32], 8), (base[3, :8], 6)]
-    outs = qm.serve(reqs, n_slots=2, max_len=64)
+    outs = qm.serve(reqs, n_slots=2, max_len=64, metrics=metrics)
     ok = True
     for i, ((prompt, n), got) in enumerate(zip(reqs, outs)):
         s1 = ServeSetup(cfg=CFG, mesh=None, max_len=len(prompt) + n, batch=1)
@@ -160,6 +177,9 @@ def main() -> None:
         raise SystemExit(
             "continuous-batching output drifted from per-request static generation"
         )
+    if args.metrics_out:
+        write_snapshot(metrics, args.metrics_out)
+        print(f"metrics snapshot -> {args.metrics_out}")
 
 
 if __name__ == "__main__":

@@ -447,7 +447,8 @@ class QuantizedModel:
         )
 
     def serve(self, requests, *, n_slots: int = 4, max_len: int | None = None,
-              mesh="auto", flash_decode: bool = False) -> list:
+              mesh="auto", flash_decode: bool = False, metrics=None,
+              trace=None) -> list:
         """Continuous-batching LM serving on the packed weights.
 
         ``requests`` is an iterable of ``(prompt_tokens, max_new_tokens)``
@@ -462,6 +463,12 @@ class QuantizedModel:
         Speculative artifacts serve draft/verify rounds (see
         :meth:`generate`); output is token-identical to serving the
         verify tier alone.
+
+        ``metrics`` / ``trace`` (an obs
+        :class:`~repro.obs.metrics.Registry` /
+        :class:`~repro.obs.trace.TraceLog`) enable the engine's
+        TTFT/ITL histograms, energy-per-token counters and per-request
+        span events (DESIGN.md §11); both default to disabled.
         """
         if self.scheme.spec_k:
             return self.adapter.serve(
@@ -476,6 +483,8 @@ class QuantizedModel:
                 ),
                 spec_k=self.scheme.spec_k,
                 spec_draft=self.scheme.spec_draft,
+                metrics=metrics,
+                trace=trace,
             )
         return self.adapter.serve(
             self.params,
@@ -484,6 +493,8 @@ class QuantizedModel:
             max_len=max_len,
             mesh=mesh,
             flash_decode=flash_decode,
+            metrics=metrics,
+            trace=trace,
         )
 
     # -- persistence --------------------------------------------------------

@@ -658,6 +658,8 @@ class LmAdapter:
         draft_params: Any = None,
         spec_k: int = 0,
         spec_draft: str = "model",
+        metrics: Any = None,
+        trace: Any = None,
     ) -> list:
         """Continuous-batching serving through :class:`repro.serve.ServeEngine`.
 
@@ -665,7 +667,8 @@ class LmAdapter:
         becomes the verify tier (it defines the output), drafted
         against by ``draft_params`` (``spec_draft="model"``) or the
         engine's token-recycling history (``spec_draft="ngram"``;
-        DESIGN.md §10).
+        DESIGN.md §10). ``metrics``/``trace`` (an obs ``Registry`` /
+        ``TraceLog``) flow through to the engine's instrumentation.
         """
         import numpy as np
 
@@ -686,6 +689,8 @@ class LmAdapter:
             draft_params=draft_params,
             spec_k=spec_k,
             spec_draft=spec_draft,
+            metrics=metrics,
+            trace=trace,
         )
         return eng.serve(reqs)
 

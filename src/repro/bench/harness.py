@@ -57,6 +57,38 @@ def time_fn(fn: Callable[[], Any], *, iters: int = 5, warmup: int = 2) -> Timing
     return Timing(float(np.median(ts) * 1e6), float(np.min(ts) * 1e6), iters, warmup)
 
 
+def time_fn_pair(
+    fn_a: Callable[[], Any], fn_b: Callable[[], Any], *, iters: int = 5, warmup: int = 2
+) -> tuple[Timing, Timing]:
+    """Interleaved A/B wall-clock comparison (blocks on results).
+
+    Alternates one call of each fn per iteration, so slow machine drift
+    (CPU frequency, co-tenant load) lands on both sides equally — the
+    right tool when the quantity of interest is the RATIO of the two
+    timings (e.g. the metrics-enabled serving overhead contract) rather
+    than either absolute number: back-to-back ``time_fn`` blocks can
+    disagree by 10%+ on a shared runner while the interleaved ratio
+    stays within noise.
+    """
+    for _ in range(warmup):
+        jax.block_until_ready(fn_a())
+        jax.block_until_ready(fn_b())
+    ts_a: list[float] = []
+    ts_b: list[float] = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_a())
+        t1 = time.perf_counter()
+        jax.block_until_ready(fn_b())
+        t2 = time.perf_counter()
+        ts_a.append(t1 - t0)
+        ts_b.append(t2 - t1)
+    return (
+        Timing(float(np.median(ts_a) * 1e6), float(np.min(ts_a) * 1e6), iters, warmup),
+        Timing(float(np.median(ts_b) * 1e6), float(np.min(ts_b) * 1e6), iters, warmup),
+    )
+
+
 def hlo_cost(fn: Callable, *args, **kwargs) -> dict:
     """FLOPs / bytes-accessed / collective bytes of ``jit(fn)(*args)``.
 
@@ -75,46 +107,8 @@ def output_mse(got, want) -> float:
     return float(np.mean((g - w) ** 2))
 
 
-def lm_weight_macs_per_token(cfg) -> int:
-    """Weight-MACs per decoded token of a transformer LM.
-
-    Attention projections (q/k/v/o), the FFN matmuls, and the lm_head,
-    times layers — the MACs that stream weights, which is what the
-    Table II weight-stationary energy model charges. Attention *score*
-    MACs are context-length-dependent and weight-free, so they are
-    deliberately excluded. MoE counts the ``topk`` active experts.
-    """
-    d, h, kv = cfg.d_model, cfg.n_heads, cfg.n_kv_heads
-    hd = cfg.head_dim or d // h
-    attn = d * h * hd + 2 * d * kv * hd + h * hd * d
-    ffn = (3 if cfg.mlp_kind == "swiglu" else 2) * d * cfg.d_ff
-    if cfg.n_experts:
-        ffn *= cfg.topk
-    return cfg.n_layers * (attn + ffn) + d * cfg.vocab
-
-
-def lm_token_energy(cfg, params, act_bits: int | None = None) -> dict:
-    """Table II modeled energy (nJ) per decoded token for an LM tree.
-
-    The MAC format is the packed leaves' dominant ``fmt_name``
-    (``conventional_fp`` for a float tree); the memory term charges the
-    tree's actual storage bytes — a whole-tree weight stream per decode
-    step, the serve engine's HBM story. Returns the
-    :func:`repro.core.energy.network_energy_nj` split plus the format
-    and MAC count it used.
-    """
-    from collections import Counter
-
-    from repro.core.energy import network_energy_nj
-    from repro.kernels.ops import PackedWeight
-    from repro.runtime.quantized_params import packed_bytes
-
-    fmts = Counter(
-        leaf.fmt_name
-        for leaf in jax.tree.leaves(params, is_leaf=lambda x: isinstance(x, PackedWeight))
-        if isinstance(leaf, PackedWeight)
-    )
-    fmt = fmts.most_common(1)[0][0] if fmts else "conventional_fp"
-    macs = lm_weight_macs_per_token(cfg)
-    e = network_energy_nj(macs, packed_bytes(params), fmt, act_bits or 8)
-    return {"fmt": fmt, "macs_per_token": macs, **e}
+# Re-exported for backward compatibility: the Table II per-token energy
+# helpers now live with the rest of the analytic model in core/energy
+# (the serve engine charges them per decoded token, so they can no
+# longer be bench-only).
+from repro.core.energy import lm_token_energy, lm_weight_macs_per_token  # noqa: E402,F401

@@ -432,6 +432,17 @@ def _run_serve_continuous(quant, n_slots, n_requests, iters, warmup):
     engine = ServeEngine(cfg, params, n_slots=n_slots, max_len=max_len, mesh=None)
     cont_fn = lambda: engine.serve(reqs, arrivals=arrivals)
 
+    # Same trace with the obs registry ENABLED — the committed number is
+    # the disabled-registry overhead contract (DESIGN.md §11): the
+    # metrics build must stay within noise of the plain engine, since
+    # recording only happens at existing dispatch sync points.
+    from repro.obs.metrics import Registry
+
+    engine_m = ServeEngine(
+        cfg, params, n_slots=n_slots, max_len=max_len, mesh=None, metrics=Registry(enabled=True)
+    )
+    metrics_fn = lambda: engine_m.serve(reqs, arrivals=arrivals)
+
     # Static padded-batch baseline: requests grouped in arrival order,
     # prompts padded to the group max, every row decoding the group's
     # max max_new — the pre-engine cost model. The jitted step pair is
@@ -461,7 +472,9 @@ def _run_serve_continuous(quant, n_slots, n_requests, iters, warmup):
                 tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
         return tok
 
-    t_cont = harness.time_fn(cont_fn, iters=iters, warmup=warmup)
+    # interleaved: the committed number is the metrics/plain RATIO, so
+    # the two engines must see the same machine drift (time_fn_pair)
+    t_cont, t_metrics = harness.time_fn_pair(cont_fn, metrics_fn, iters=iters, warmup=warmup)
     t_static = harness.time_fn(static_fn, iters=iters, warmup=warmup)
 
     # Acceptance metric: continuous output token-identical to
@@ -476,6 +489,7 @@ def _run_serve_continuous(quant, n_slots, n_requests, iters, warmup):
         matched += int(np.sum(ref == out))
         total += n
     tok_s_cont = useful_tokens / (t_cont.min_us * 1e-6)
+    tok_s_metrics = useful_tokens / (t_metrics.min_us * 1e-6)
     tok_s_static = useful_tokens / (t_static.min_us * 1e-6)
     energy = harness.lm_token_energy(cfg, params)
 
@@ -489,10 +503,16 @@ def _run_serve_continuous(quant, n_slots, n_requests, iters, warmup):
             "max_len": max_len,
             "useful_tokens": useful_tokens,
         },
-        "wall_us": {"continuous": t_cont.to_json(), "static": t_static.to_json()},
+        "wall_us": {
+            "continuous": t_cont.to_json(),
+            "metrics": t_metrics.to_json(),
+            "static": t_static.to_json(),
+        },
         "hlo": engine.decode_cost(),
         "quality": {
             "tokens_per_s_continuous": round(tok_s_cont, 1),
+            "tokens_per_s_metrics": round(tok_s_metrics, 1),
+            "metrics_overhead_frac": round(t_metrics.min_us / t_cont.min_us - 1.0, 4),
             "tokens_per_s_static": round(tok_s_static, 1),
             "speedup_vs_static": round(tok_s_cont / tok_s_static, 3),
             "token_match_frac": round(matched / total, 4),

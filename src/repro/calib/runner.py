@@ -176,12 +176,18 @@ def per_layer_output_mse(
     spec,
     x: Array,
     table: CalibrationTable,
+    *,
+    metrics=None,
 ) -> dict[str, float]:
     """Per-site MSE of the calibrated-quantized forward vs the fp run.
 
     ``quant_params`` lets the caller pass bias-folded params; each tap
     site's error reflects everything quantized upstream of it, so the
     effect of folding site N's compensation shows up at site N+1.
+
+    ``metrics`` (an obs :class:`~repro.obs.metrics.Registry`) records
+    each site's error as a ``calib.mse.<site>`` gauge, so calibration
+    quality exports through the same snapshot as serve/train telemetry.
     """
     from repro.models import cnn
 
@@ -192,10 +198,14 @@ def per_layer_output_mse(
 
     acts_fp = jax.jit(lambda: run(params, None))()
     acts_q = jax.jit(lambda: run(quant_params, table))()
-    return {
+    out = {
         name: float(jnp.mean(jnp.square(acts_q[name] - acts_fp[name])))
         for name in acts_fp
     }
+    if metrics is not None:
+        for name, mse in out.items():
+            metrics.gauge(f"calib.mse.{name}").set(mse)
+    return out
 
 
 def count_range_reductions(fn: Callable, *args, **kwargs) -> int:

@@ -15,7 +15,15 @@ from __future__ import annotations
 
 import dataclasses
 
-__all__ = ["MacPoint", "TABLE2", "pdp_fj", "network_energy_nj", "pdp_reduction"]
+__all__ = [
+    "MacPoint",
+    "TABLE2",
+    "pdp_fj",
+    "network_energy_nj",
+    "pdp_reduction",
+    "lm_weight_macs_per_token",
+    "lm_token_energy",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,3 +97,52 @@ def network_energy_nj(
 def pdp_reduction(fmt_name: str, act_bits: int, baseline: str = "conventional_fp") -> float:
     """Fractional PDP reduction vs. a Table II baseline (paper's headline)."""
     return 1.0 - pdp_fj(fmt_name, act_bits) / pdp_fj(baseline, 8)
+
+
+def lm_weight_macs_per_token(cfg) -> int:
+    """Weight-MACs per decoded token of a transformer LM.
+
+    Attention projections (q/k/v/o), the FFN matmuls, and the lm_head,
+    times layers — the MACs that stream weights, which is what the
+    Table II weight-stationary energy model charges. Attention *score*
+    MACs are context-length-dependent and weight-free, so they are
+    deliberately excluded. MoE counts the ``topk`` active experts.
+    """
+    d, h, kv = cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    hd = cfg.head_dim or d // h
+    attn = d * h * hd + 2 * d * kv * hd + h * hd * d
+    ffn = (3 if cfg.mlp_kind == "swiglu" else 2) * d * cfg.d_ff
+    if cfg.n_experts:
+        ffn *= cfg.topk
+    return cfg.n_layers * (attn + ffn) + d * cfg.vocab
+
+
+def lm_token_energy(cfg, params, act_bits: int | None = None) -> dict:
+    """Table II modeled energy (nJ) per decoded token for an LM tree.
+
+    The MAC format is the packed leaves' dominant ``fmt_name``
+    (``conventional_fp`` for a float tree); the memory term charges the
+    tree's actual storage bytes — a whole-tree weight stream per decode
+    step, the serve engine's HBM story. Returns the
+    :func:`network_energy_nj` split plus the format and MAC count it
+    used.
+
+    Imports are deferred: this module stays importable without jax, and
+    ``core`` must not depend on ``kernels``/``runtime`` at import time.
+    """
+    from collections import Counter
+
+    import jax
+
+    from repro.kernels.ops import PackedWeight
+    from repro.runtime.quantized_params import packed_bytes
+
+    fmts = Counter(
+        leaf.fmt_name
+        for leaf in jax.tree.leaves(params, is_leaf=lambda x: isinstance(x, PackedWeight))
+        if isinstance(leaf, PackedWeight)
+    )
+    fmt = fmts.most_common(1)[0][0] if fmts else "conventional_fp"
+    macs = lm_weight_macs_per_token(cfg)
+    e = network_energy_nj(macs, packed_bytes(params), fmt, act_bits or 8)
+    return {"fmt": fmt, "macs_per_token": macs, **e}

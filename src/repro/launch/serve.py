@@ -7,9 +7,17 @@ front door, stands up a :class:`~repro.serve.ServeEngine` on an elastic
 mesh (``runtime/elastic`` picks the largest divisibility-honoring mesh
 for the alive devices), and serves a mixed-length staggered request
 trace — no padding of short prompts, slots reused the step a request
-finishes. Prints per-request outputs, throughput, and the straggler
-monitor's slow-step report (``--flash-decode`` turns on the
-sequence-sharded flash-decoding cache layout from §Perf).
+finishes. Prints per-request outputs, throughput, a latency report
+(p50/p99 TTFT, inter-token latency, request time — dispatch-clocked
+per-request histograms, DESIGN.md §11), the Table II modeled
+energy-per-token, and the straggler monitor's slow-step summary
+(``--flash-decode`` turns on the sequence-sharded flash-decoding cache
+layout from §Perf).
+
+``--metrics-out PATH`` additionally writes the schema-versioned obs
+snapshot to PATH and the per-request span event log (submit → admit →
+decode/round → finish) to ``PATH``'s sibling ``*.events.jsonl``;
+validate with ``python -m repro.obs --validate PATH``.
 
 Families outside the engine (recurrent / enc-dec / frontend archs) and
 ``--static`` fall back to the lockstep static batch loop.
@@ -71,6 +79,19 @@ def main() -> None:
         help='draft source for --speculative: a packed tier of the same '
         'checkpoint, or "ngram" (token-recycling lookup, no draft forwards)',
     )
+    ap.add_argument(
+        "--metrics-out",
+        default=None,
+        metavar="PATH",
+        help="write the obs snapshot JSON here (and the span event log "
+        "to the sibling *.events.jsonl)",
+    )
+    ap.add_argument(
+        "--profile-dir",
+        default=None,
+        metavar="DIR",
+        help="capture a jax.profiler trace of the first decode dispatches into DIR",
+    )
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -128,6 +149,16 @@ def main() -> None:
         print("generated (static batch):", np.asarray(toks)[:, :12])
         return
 
+    from repro.obs import ProfileHook, Registry, TraceLog, write_snapshot
+
+    registry = Registry(enabled=True)
+    trace_log = None
+    if args.metrics_out:
+        import os
+
+        trace_log = TraceLog(sink=os.path.splitext(args.metrics_out)[0] + ".events.jsonl")
+    profile = ProfileHook(args.profile_dir) if args.profile_dir else None
+
     engine = ServeEngine(
         cfg,
         params,
@@ -137,6 +168,9 @@ def main() -> None:
         draft_params=draft_params,
         spec_k=args.spec_k if args.speculative else 0,
         spec_draft=spec_draft,
+        metrics=registry,
+        trace=trace_log,
+        profile=profile,
     )
     reqs, arrivals = _trace(ds, args.prompt_len, args.requests, args.max_new)
     t0 = time.perf_counter()
@@ -158,11 +192,33 @@ def main() -> None:
             f"{sp['rounds']} rounds, {sp['tokens_accepted']}/{sp['tokens_drafted']} "
             f"drafted tokens accepted ({sp['acceptance_rate']:.3f})"
         )
+    lat = st["latency"]
+    print(
+        f"latency: TTFT p50 {lat['ttft_p50_s'] * 1e3:.1f} ms / "
+        f"p99 {lat['ttft_p99_s'] * 1e3:.1f} ms; "
+        f"ITL p50 {lat['itl_p50_s'] * 1e3:.2f} ms / "
+        f"p99 {lat['itl_p99_s'] * 1e3:.2f} ms; "
+        f"request p50 {lat['request_p50_s'] * 1e3:.1f} ms / "
+        f"p99 {lat['request_p99_s'] * 1e3:.1f} ms"
+    )
+    e = engine.energy
+    print(
+        f"energy (Table II model): {e['total_nj']:.0f} nJ/token "
+        f"({e['fmt']}, {e['macs_per_token'] / 1e6:.1f} M MACs — "
+        f"compute {e['compute_nj']:.0f} nJ + weight stream {e['memory_nj']:.0f} nJ); "
+        f"total {registry.counter('serve.energy_nj_total').value / 1e6:.2f} mJ"
+    )
     sr = st["straggler"]
     print(
-        f"straggler report: {sr['straggle_events']} slow steps over {sr['steps']} "
-        f"(median {sr['median_s'] * 1e3:.1f} ms, worst x{sr['worst_ratio']:.2f})"
+        f"straggler: {sr['straggle_events']} slow steps over {sr['steps']} "
+        f"(step p50 {sr['p50_s'] * 1e3:.1f} ms / p99 {sr['p99_s'] * 1e3:.1f} ms, "
+        f"worst x{sr['worst_ratio']:.2f})"
     )
+    if trace_log is not None:
+        trace_log.close()
+    if args.metrics_out:
+        write_snapshot(registry, args.metrics_out)
+        print(f"metrics snapshot -> {args.metrics_out}")
 
 
 if __name__ == "__main__":

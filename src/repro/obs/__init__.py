@@ -1,0 +1,56 @@
+"""Observability: metrics, per-request tracing, exposition (DESIGN.md §11).
+
+Public surface:
+
+  * :class:`~repro.obs.metrics.Registry` — process-local store of
+    counters, gauges, and log-bucket streaming histograms (jax-free,
+    O(1) memory; a disabled registry is a no-op on the hot path).
+  * :class:`~repro.obs.trace.TraceLog` — per-request span events
+    (submit → admit → prefill → decode/round → finish) to a JSONL sink.
+  * :class:`~repro.obs.trace.ProfileHook` — optional ``jax.profiler``
+    capture around N decode dispatches.
+  * :func:`~repro.obs.export.prometheus_text` /
+    :func:`~repro.obs.export.snapshot` /
+    :func:`~repro.obs.export.validate_snapshot` — Prometheus text
+    exposition and the schema-versioned JSON snapshot.
+
+Consumers: :class:`repro.serve.ServeEngine` (TTFT/ITL histograms,
+speculative round stats, energy-per-token), :func:`repro.runtime
+.train_loop.train` (step time), :mod:`repro.calib.runner` (per-site
+quant-MSE), :class:`repro.runtime.straggler.StragglerMonitor` (built on
+the histogram primitive).
+"""
+from repro.obs.export import (
+    SnapshotError,
+    load_snapshot,
+    prometheus_text,
+    snapshot,
+    validate_snapshot,
+    write_snapshot,
+)
+from repro.obs.metrics import (
+    LATENCY_BUCKETS,
+    NULL_REGISTRY,
+    Counter,
+    Gauge,
+    Histogram,
+    Registry,
+)
+from repro.obs.trace import ProfileHook, TraceLog
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "LATENCY_BUCKETS",
+    "NULL_REGISTRY",
+    "ProfileHook",
+    "Registry",
+    "SnapshotError",
+    "TraceLog",
+    "load_snapshot",
+    "prometheus_text",
+    "snapshot",
+    "validate_snapshot",
+    "write_snapshot",
+]

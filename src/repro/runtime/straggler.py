@@ -8,12 +8,23 @@ deployment it triggers (in escalating order) data-load rebalancing,
 hot-spare swap-in, or an elastic re-mesh (see runtime/elastic.py);
 here the default action records the event so tests can assert the
 policy fires.
+
+Memory is O(1) in the number of steps (DESIGN.md §11): the rolling
+median reads a ``deque`` capped at ``window`` entries (the tail is all
+it ever consulted), the full step-time distribution lives in a
+:class:`repro.obs.metrics.Histogram` (fixed log buckets, no samples
+retained), and the event list keeps only the ``window`` most recent
+events plus running totals — a long-lived serving engine's monitor no
+longer grows with every step it records.
 """
 from __future__ import annotations
 
 import dataclasses
 import statistics
+from collections import deque
 from typing import Callable
+
+from repro.obs.metrics import Histogram
 
 
 @dataclasses.dataclass
@@ -21,29 +32,45 @@ class StragglerMonitor:
     threshold: float = 2.0
     window: int = 50
     on_straggle: Callable[[int, float, float], None] | None = None
-    _times: list[float] = dataclasses.field(default_factory=list)
-    _events: list[tuple[int, float, float]] = dataclasses.field(default_factory=list)
+
+    def __post_init__(self) -> None:
+        self._times: deque[float] = deque(maxlen=self.window)
+        self._events: deque[tuple[int, float, float]] = deque(maxlen=self.window)
+        self.hist = Histogram("straggler.step_s")
+        self._n_events = 0
+        self._worst_ratio = 1.0
 
     def record(self, dt: float) -> bool:
         """Record one step duration; returns True if it straggled."""
+        self.hist.record(dt)
+        straggled = False
+        hist = list(self._times)  # the window-1..window most recent PRIOR steps
+        if len(hist) >= 5:
+            med = statistics.median(hist)
+            if dt > self.threshold * med:
+                ev = (self.hist.count - 1, dt, med)
+                self._events.append(ev)
+                self._n_events += 1
+                self._worst_ratio = max(self._worst_ratio, dt / med)
+                if self.on_straggle:
+                    self.on_straggle(*ev)
+                straggled = True
         self._times.append(dt)
-        hist = self._times[-self.window : -1]
-        if len(hist) < 5:
-            return False
-        med = statistics.median(hist)
-        if dt > self.threshold * med:
-            ev = (len(self._times) - 1, dt, med)
-            self._events.append(ev)
-            if self.on_straggle:
-                self.on_straggle(*ev)
-            return True
-        return False
+        return straggled
 
     def report(self) -> dict:
-        med = statistics.median(self._times) if self._times else 0.0
+        """Slow-step summary: rolling median, event totals, distribution.
+
+        ``median_s`` is the rolling-window median (what the straggle
+        threshold compares against); ``p50_s``/``p99_s``/``max_s`` read
+        the whole-run histogram.
+        """
         return {
-            "steps": len(self._times),
-            "median_s": med,
-            "straggle_events": len(self._events),
-            "worst_ratio": max((d / m for _, d, m in self._events), default=1.0),
+            "steps": self.hist.count,
+            "median_s": statistics.median(self._times) if self._times else 0.0,
+            "straggle_events": self._n_events,
+            "worst_ratio": self._worst_ratio,
+            "p50_s": self.hist.percentile(50) or 0.0,
+            "p99_s": self.hist.percentile(99) or 0.0,
+            "max_s": self.hist.max if self.hist.count else 0.0,
         }

@@ -25,6 +25,7 @@ from repro.checkpoint.manager import CheckpointManager
 from repro.data.pipeline import LmDataset, shard_batch
 from repro.models import ModelApi, get_model
 from repro.models.context import ParallelCtx
+from repro.obs.metrics import NULL_REGISTRY, Registry
 from repro.optim import adamw
 from repro.optim.compress import init_error_state, tree_quantize_with_feedback
 from repro.runtime import sharding as shr
@@ -150,8 +151,15 @@ def train(
     log_every: int = 10,
     seed: int = 0,
     log_fn: Callable[[str], None] = print,
+    metrics: Registry | None = None,
 ) -> dict[str, Any]:
-    """Host training loop: data → step → checkpoint, with auto-resume."""
+    """Host training loop: data → step → checkpoint, with auto-resume.
+
+    ``metrics`` (an obs :class:`Registry`, DESIGN.md §11) records the
+    host-clocked step-time distribution (``train.step_s``), the running
+    loss/lr gauges, and a step counter through the same registry the
+    serve engine reports into; ``None`` is a no-op.
+    """
     cfg = setup.cfg
     api = get_model(cfg)
     mesh = setup.mesh
@@ -194,20 +202,30 @@ def train(
         bspecs = None
 
     monitor = StragglerMonitor()
+    reg = metrics or NULL_REGISTRY
+    m_step = reg.histogram("train.step_s")
+    m_loss = reg.gauge("train.loss")
+    m_lr = reg.gauge("train.lr")
+    m_steps = reg.counter("train.steps_total")
     losses = []
     ctx = mesh if mesh is not None else _nullcontext()
     with ctx:
         for i in range(start, steps):
             batch = shard_batch(ds.np_batch(i), mesh, bspecs)
             t0 = time.perf_counter()
-            params, opt_state, err_state, metrics = step(
+            params, opt_state, err_state, step_metrics = step(
                 params, opt_state, err_state, batch
             )
-            loss = float(metrics["loss"])
-            monitor.record(time.perf_counter() - t0)
+            loss = float(step_metrics["loss"])
+            dt = time.perf_counter() - t0
+            monitor.record(dt)
+            m_step.record(dt)
+            m_loss.set(loss)
+            m_lr.set(float(step_metrics["lr"]))
+            m_steps.inc()
             losses.append(loss)
             if i % log_every == 0:
-                log_fn(f"step {i:5d} loss {loss:.4f} lr {float(metrics['lr']):.2e}")
+                log_fn(f"step {i:5d} loss {loss:.4f} lr {float(step_metrics['lr']):.2e}")
             if mgr is not None and (i + 1) % ckpt_every == 0:
                 mgr.save(i + 1, {"params": params, "opt": opt_state})
     if mgr is not None:

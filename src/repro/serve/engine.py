@@ -40,6 +40,18 @@ the largest divisibility-honoring mesh for the alive devices
 :func:`repro.runtime.elastic.reshard`. Each decode step's wall-clock
 feeds a :class:`repro.runtime.straggler.StragglerMonitor`;
 ``stats()["straggler"]`` surfaces the slow-step report.
+
+Observability (DESIGN.md §11): pass ``metrics=Registry(enabled=True)``
+and the engine records per-request time-to-first-token and inter-token
+latency histograms, queue-depth/slot-occupancy gauges, speculative
+round-width and acceptance distributions, and modeled Table II energy
+per emitted token (``core/energy``) — all host-side, at the sync points
+the loop already pays for (the decode loop stays device-resident).
+``trace=TraceLog(...)`` additionally logs the per-request span events
+(submit → admit/prefill → decode/round → finish) as JSONL, and
+``profile=ProfileHook(dir, n)`` captures a ``jax.profiler`` trace
+around the first ``n`` decode dispatches. All three default to off and
+cost nothing when off: the disabled registry's instruments are no-ops.
 """
 from __future__ import annotations
 
@@ -53,8 +65,11 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig
+from repro.core.energy import lm_token_energy
 from repro.models import ModelApi, get_model
 from repro.models.context import ParallelCtx
+from repro.obs.metrics import NULL_REGISTRY, Registry
+from repro.obs.trace import ProfileHook, TraceLog
 from repro.runtime import sharding as shr
 from repro.runtime.straggler import StragglerMonitor
 from repro.serve.scheduler import Request, SlotScheduler
@@ -512,6 +527,15 @@ class ServeEngine:
         ``draft_params`` — the paper-faithful mode, fastest where the
         low-bit tier's forward is genuinely cheaper than the verify
         tier's (accelerators whose decode is weight-bandwidth-bound).
+      metrics: a :class:`repro.obs.metrics.Registry`; when enabled the
+        engine records TTFT/ITL histograms, queue/slot gauges,
+        speculative round distributions and modeled energy (DESIGN.md
+        §11). ``None`` (default) uses the shared disabled registry —
+        every record is a no-op.
+      trace: a :class:`repro.obs.trace.TraceLog` for per-request span
+        events (JSONL). ``None`` disables tracing.
+      profile: a :class:`repro.obs.trace.ProfileHook` capturing a
+        ``jax.profiler`` trace around the first N decode dispatches.
         ``"ngram"`` drafts by token-recycling prompt lookup: the engine
         remembers, across its whole lifetime, which VERIFIED token
         followed each token and replays those chains — drafting costs
@@ -537,6 +561,9 @@ class ServeEngine:
         draft_params: Any = None,
         spec_k: int = 0,
         spec_draft: str = "model",
+        metrics: Registry | None = None,
+        trace: TraceLog | None = None,
+        profile: ProfileHook | None = None,
     ):
         if cfg.family not in ENGINE_FAMILIES:
             raise ValueError(
@@ -641,6 +668,39 @@ class ServeEngine:
                 self._ngram = np.full(cfg.vocab, -1, np.int32)
                 self._pending = np.zeros(n_slots, np.int32)
         self.monitor = monitor or StragglerMonitor()
+        # observability (DESIGN.md §11): instrument handles are resolved
+        # once here; with a disabled registry they are shared null
+        # objects whose record/inc/set is a single `pass`, so the hot
+        # loop's cost is one attribute lookup per event, metrics on or
+        # off. Table II energy per emitted token is modeled once at
+        # startup from the tree that serves (fmt of the packed leaves,
+        # bytes actually streamed per decode step).
+        self.metrics = metrics or NULL_REGISTRY
+        self.trace = trace
+        self.profile = profile
+        m = self.metrics
+        self._m_ttft = m.histogram("serve.ttft_s")
+        self._m_itl = m.histogram("serve.itl_s")
+        self._m_prefill = m.histogram("serve.prefill_s")
+        self._m_request = m.histogram("serve.request_s")
+        self._m_queue = m.gauge("serve.queue_depth")
+        self._m_live = m.gauge("serve.slots_live")
+        self._m_tokens = m.counter("serve.tokens_total")
+        self._m_finished = m.counter("serve.requests_finished_total")
+        self._m_energy = m.counter("serve.energy_nj_total")
+        self.energy = lm_token_energy(cfg, params)
+        self._draft_energy = (
+            lm_token_energy(cfg, self.draft_params)
+            if self.spec_k and self.spec_draft == "model"
+            else None
+        )
+        if self.spec_k:
+            self._m_width = m.histogram(
+                "serve.spec.round_width", lo=1.0, growth=2.0**0.25, n_buckets=24
+            )
+            self._m_acc = m.histogram(
+                "serve.spec.accepted_per_round", lo=1.0, growth=2.0**0.25, n_buckets=24
+            )
         self._sched = SlotScheduler(n_slots)
         self._requests: dict[int, Request] = {}
         self._next_rid = 0
@@ -684,8 +744,13 @@ class ServeEngine:
         rid = self._next_rid
         self._next_rid += 1
         req = Request(rid=rid, prompt=prompt, max_new_tokens=int(max_new_tokens), key=key)
+        req.t_submit = time.perf_counter()
         self._requests[rid] = req
         self._sched.submit(req)
+        if self.trace is not None:
+            self.trace.event(
+                "submit", rid, prompt_len=int(prompt.size), max_new=int(max_new_tokens)
+            )
         return rid
 
     def evict(self, rid: int) -> np.ndarray:
@@ -733,6 +798,7 @@ class ServeEngine:
         """
         progressed = False
         for slot, req in self._sched.ready():
+            req.t_admit = time.perf_counter()
             logits, self._cache = self._prefill(
                 self.params, jnp.asarray(req.prompt[None]), self._cache, jnp.int32(slot)
             )
@@ -766,9 +832,28 @@ class ServeEngine:
                 self._tok_dev = self._tok_dev.at[slot, 0].set(tok)
             self._tokens_generated += 1
             self._pos[slot] = req.prompt.size
+            # the admission prefill emits the request's FIRST token, so
+            # this dispatch-clocked timestamp is its TTFT sample (the
+            # same sync-point clocking the straggler monitor uses)
+            req.t_first = time.perf_counter()
+            self._m_ttft.record(req.t_first - req.t_submit)
+            self._m_prefill.record(req.t_first - req.t_admit)
+            self._m_tokens.inc()
+            self._m_energy.inc(self.energy["total_nj"])
+            if self.trace is not None:
+                self.trace.event(
+                    "admit",
+                    req.rid,
+                    slot=slot,
+                    prompt_len=int(req.prompt.size),
+                    prefill_s=req.t_first - req.t_admit,
+                    ttft_s=req.t_first - req.t_submit,
+                )
             self._maybe_finish(slot, req)
             progressed = True
 
+        self._m_queue.set(self._sched.queued)
+        self._m_live.set(len(self._sched.live))
         live = self._sched.live
         if live and self.spec_k:
             self._spec_round(live)
@@ -780,6 +865,7 @@ class ServeEngine:
             # CPU, and self._pos is mutated in place below while the
             # (async) decode may not have read it yet
             pos = jnp.asarray(np.array(self._pos))
+            n_live = len(live)  # snapshot: _maybe_finish pops from live
             t0 = time.perf_counter()
             if all(r.key is None for r in live.values()):
                 nxt, self._cache = self._decode_greedy(
@@ -788,10 +874,12 @@ class ServeEngine:
                 self._tok_dev = nxt
                 # dispatch-clocked: once the device queue back-pressures,
                 # dispatch wall-clock tracks true step time
-                self.monitor.record(time.perf_counter() - t0)
+                dt = time.perf_counter() - t0
+                self.monitor.record(dt)
                 for slot, req in list(live.items()):
                     req.out.append((nxt, slot))
                     self._tokens_generated += 1
+                    self._m_itl.record(dt)
                     self._pos[slot] += 1
                     self._maybe_finish(slot, req)
             else:
@@ -799,16 +887,24 @@ class ServeEngine:
                     self.params, self._tok_dev, self._cache, pos
                 )
                 logits = np.asarray(jax.block_until_ready(logits))
-                self.monitor.record(time.perf_counter() - t0)
+                dt = time.perf_counter() - t0
+                self.monitor.record(dt)
                 toks = np.zeros(self._sched.n_slots, np.int32)
                 for slot, req in list(live.items()):
                     tok = self._select(req, logits[slot, -1])
                     req.out.append(tok)
                     toks[slot] = tok
                     self._tokens_generated += 1
+                    self._m_itl.record(dt)
                     self._pos[slot] += 1
                     self._maybe_finish(slot, req)
                 self._tok_dev = jnp.asarray(toks[:, None])
+            self._m_tokens.inc(n_live)
+            self._m_energy.inc(self.energy["total_nj"] * n_live)
+            if self.profile is not None:
+                self.profile.step()
+            if self.trace is not None:
+                self.trace.event("decode", None, live=n_live, dt_s=dt)
             self._decode_steps += 1
             progressed = True
         self.steps += 1
@@ -835,6 +931,8 @@ class ServeEngine:
         if arrivals is None:
             rids = [self.submit(t, n) for t, n in reqs]
             self.run()
+            if self.profile is not None:
+                self.profile.stop()
             return [self.release(r) for r in rids]
         arrivals = list(arrivals)
         if len(arrivals) != len(reqs):
@@ -853,6 +951,8 @@ class ServeEngine:
                 rids[i] = self.submit(*reqs[i])
                 i += 1
             self.step()
+        if self.profile is not None:
+            self.profile.stop()
         return [self.release(r) for r in rids]
 
     # -- introspection -------------------------------------------------------
@@ -875,8 +975,18 @@ class ServeEngine:
             "live_slots": len(self._sched.live),
             "n_slots": self._sched.n_slots,
             "mesh": dict(self.mesh.shape) if self.mesh is not None else None,
+            "energy_nj_per_token": self.energy["total_nj"],
             "straggler": self.monitor.report(),
         }
+        if self.metrics.enabled:
+            st["latency"] = {
+                "ttft_p50_s": self._m_ttft.percentile(50),
+                "ttft_p99_s": self._m_ttft.percentile(99),
+                "itl_p50_s": self._m_itl.percentile(50),
+                "itl_p99_s": self._m_itl.percentile(99),
+                "request_p50_s": self._m_request.percentile(50),
+                "request_p99_s": self._m_request.percentile(99),
+            }
         if self.spec_k:
             rate = (
                 self._tokens_accepted / self._tokens_drafted
@@ -973,7 +1083,8 @@ class ServeEngine:
         if self.spec_draft == "model":
             self._tok_dev = ptok
         # dispatch-clocked like the plain path: one record per round
-        self.monitor.record(time.perf_counter() - t0)
+        dt = time.perf_counter() - t0
+        self.monitor.record(dt)
         acc_np = np.asarray(acc)  # the round's one blocking sync
         vtok_np = np.asarray(vtok) if self.spec_draft == "ngram" else None
         acc_sum = 0
@@ -999,8 +1110,29 @@ class ServeEngine:
             self._tokens_drafted += width - 1
             self._tokens_accepted += a - 1
             self._tokens_generated += take
+            self._m_acc.record(a)
+            # the round emitted `take` tokens over one dispatch: each is
+            # one inter-token-latency sample of dt / take (speculation's
+            # whole point is that this is below the plain-decode ITL)
+            if take:
+                itl = dt / take
+                for _ in range(take):
+                    self._m_itl.record(itl)
+                self._m_tokens.inc(take)
+                self._m_energy.inc(self.energy["total_nj"] * take)
             self._pos[slot] += take
             self._maybe_finish(slot, req)
+        self._m_width.record(width)
+        if self._draft_energy is not None:
+            # a model-draft round additionally streams the draft tier's
+            # weights once per drafted position
+            self._m_energy.inc(self._draft_energy["total_nj"] * width)
+        if self.profile is not None:
+            self.profile.step()
+        if self.trace is not None:
+            self.trace.event(
+                "round", None, live=n_live, width=width, accepted=acc_sum - n_live, dt_s=dt
+            )
         mean_a = acc_sum / n_live
         if mean_a >= width:
             self._spec_width = min(self.spec_k, max(self._spec_width, width + 1))
@@ -1047,3 +1179,15 @@ class ServeEngine:
             self._sched.finish(slot)
             self._completed += 1
             self._pos[slot] = 0
+            req.t_finish = time.perf_counter()
+            self._m_request.record(req.t_finish - req.t_submit)
+            self._m_finished.inc()
+            if self.trace is not None:
+                self.trace.event(
+                    "finish",
+                    req.rid,
+                    slot=slot,
+                    tokens=len(req.out),
+                    truncated=req.truncated,
+                    total_s=req.t_finish - req.t_submit,
+                )

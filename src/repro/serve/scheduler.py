@@ -58,6 +58,13 @@ class Request:
     truncated: bool = False
     drafted: int = 0
     accepted: int = 0
+    # span timestamps (time.perf_counter, dispatch-clocked at the
+    # engine's existing sync points; DESIGN.md §11): set by the engine
+    # at submit / admission / first emitted token / finish.
+    t_submit: float = 0.0
+    t_admit: float = 0.0
+    t_first: float = 0.0
+    t_finish: float = 0.0
 
     @property
     def remaining(self) -> int:
