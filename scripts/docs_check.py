@@ -1,0 +1,114 @@
+#!/usr/bin/env python
+"""Docs consistency check (CI `docs-check` job; DESIGN.md §7).
+
+DESIGN.md is the repo's architecture contract and everything —
+docstrings, comments, README, tests — cross-references it by section
+number (`DESIGN.md §9`). Renumbering or dropping a section silently
+strands every reference, so CI greps them all against the actual
+`## §N` headers:
+
+    python scripts/docs_check.py refs
+
+The README's paged-KV serving snippet is executable documentation;
+`examples-smoke` runs it so the README cannot drift from the API:
+
+    python scripts/docs_check.py snippet
+
+`refs` is pure text processing (no jax import — it runs in the lint
+image); `snippet` needs the repro package on PYTHONPATH.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# The §-reference idiom this validates is the explicit `DESIGN.md §N`
+# form (optionally a comma list: `DESIGN.md §9, §12`). Bare `§Perf` /
+# `§Roofline` shorthands in old comments are historical prose, not
+# section pointers, and are deliberately out of scope.
+_REF = re.compile(r"DESIGN\.md\s+(§\d+(?:\s*,\s*§\d+)*)")
+_HDR = re.compile(r"^## §(\d+)\s", re.M)
+
+SCAN_DIRS = ("src", "tests", "scripts", "examples", "benchmarks")
+SCAN_FILES = ("README.md", "ROADMAP.md", "DESIGN.md", "CHANGES.md", "PAPER.md")
+SCAN_EXT = (".py", ".md", ".sh", ".yml")
+
+
+def section_numbers(design_text: str) -> set[int]:
+    """Section numbers with an actual `## §N ` header in DESIGN.md."""
+    return {int(n) for n in _HDR.findall(design_text)}
+
+
+def referenced_sections(text: str) -> set[int]:
+    """Every §N pointed at through a `DESIGN.md §N[, §M...]` reference."""
+    out: set[int] = set()
+    for group in _REF.findall(text):
+        out.update(int(n) for n in re.findall(r"§(\d+)", group))
+    return out
+
+
+def _scan_paths() -> list[str]:
+    paths = [os.path.join(REPO, f) for f in SCAN_FILES]
+    for d in SCAN_DIRS:
+        for root, dirs, files in os.walk(os.path.join(REPO, d)):
+            dirs[:] = [x for x in dirs if x != "__pycache__"]
+            paths += [
+                os.path.join(root, f) for f in files if f.endswith(SCAN_EXT)
+            ]
+    return [p for p in paths if os.path.exists(p)]
+
+
+def check_refs() -> list[str]:
+    """`path: DESIGN.md §N does not exist` lines; empty means clean."""
+    with open(os.path.join(REPO, "DESIGN.md")) as f:
+        have = section_numbers(f.read())
+    errors = []
+    for path in _scan_paths():
+        with open(path, errors="replace") as f:
+            text = f.read()
+        for n in sorted(referenced_sections(text) - have):
+            rel = os.path.relpath(path, REPO)
+            errors.append(f"{rel}: references DESIGN.md §{n}, which has no header")
+    return errors
+
+
+def readme_snippets(readme_text: str, needle: str = "kv_cache") -> list[str]:
+    """The README's self-contained python blocks matching ``needle``."""
+    blocks = re.findall(r"```python\n(.*?)```", readme_text, re.S)
+    return [b for b in blocks if needle in b]
+
+
+def run_snippet() -> None:
+    with open(os.path.join(REPO, "README.md")) as f:
+        blocks = readme_snippets(f.read())
+    if not blocks:
+        raise SystemExit("README.md: no paged-KV python snippet found")
+    for i, block in enumerate(blocks):
+        print(f"[docs-check] exec README snippet {i + 1}/{len(blocks)}")
+        exec(compile(block, f"<README.md snippet {i + 1}>", "exec"), {})
+
+
+def main(argv: list[str]) -> int:
+    mode = argv[0] if argv else "refs"
+    if mode == "refs":
+        errors = check_refs()
+        for e in errors:
+            print("[docs-check] " + e, file=sys.stderr)
+        if not errors:
+            with open(os.path.join(REPO, "DESIGN.md")) as f:
+                have = section_numbers(f.read())
+            print(f"[docs-check] ok: all DESIGN.md §-references resolve "
+                  f"(headers: {', '.join('§' + str(n) for n in sorted(have))})")
+        return 1 if errors else 0
+    if mode == "snippet":
+        run_snippet()
+        return 0
+    print(f"usage: {sys.argv[0]} [refs|snippet]", file=sys.stderr)
+    return 2
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

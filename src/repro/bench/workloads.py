@@ -418,6 +418,7 @@ def _run_serve_continuous(quant, n_slots, n_requests, iters, warmup):
     cfg = _serve_bench_cfg()
     model = get_model(cfg)
     params = model.init_params(cfg, jax.random.PRNGKey(0))
+    float_params = params  # KV-scale calibration taps the float forward
     float_bytes = packed_bytes(params)
     if quant != "float":
         params = front.quantize(cfg, params, front.QuantScheme(fmt=quant)).params
@@ -493,6 +494,53 @@ def _run_serve_continuous(quant, n_slots, n_requests, iters, warmup):
     tok_s_static = useful_tokens / (t_static.min_us * 1e-6)
     energy = harness.lm_token_energy(cfg, params)
 
+    # Paged int8 KV cache (DESIGN.md §12) on a shared-system-prefix
+    # trace: every request opens with the same 32-token system prompt,
+    # the shape copy-on-write prefix sharing exists for. Committed
+    # numbers are the memory contract (bytes/slot vs the dense float
+    # cache, slots servable at the dense memory budget) and token
+    # identity against the dense-layout static int8 reference on both
+    # decode paths — paging must change addressing and storage, not
+    # output (quantization numerics are pinned by the reference using
+    # the SAME codes and scales). Scales come from `calib/` observers
+    # on the float model: zero runtime range reductions (DESIGN.md §6).
+    from repro.calib import calibrate_kv_cache
+    from repro.core.energy import lm_cache_bytes_per_token
+
+    calib_toks = jax.random.randint(jax.random.PRNGKey(5), (2, 2, 64), 0, cfg.vocab)
+    kv_scales = calibrate_kv_cache(float_params, cfg, calib_toks)
+    sys_prefix = rng.integers(0, cfg.vocab, 32).astype(np.int32)
+    paged_reqs = []
+    for i in range(min(n_requests, 8)):
+        suffix = rng.integers(0, cfg.vocab, 4 + (3 * i) % 24)
+        paged_reqs.append((np.concatenate([sys_prefix, suffix]).astype(np.int32), 12))
+    scales = (jnp.asarray(kv_scales[0]), jnp.asarray(kv_scales[1]))
+    refs = []
+    for prompt, n in paged_reqs:
+        rsetup = ServeSetup(cfg=cfg, mesh=None, max_len=prompt.size + n, batch=1)
+        feed = {"tokens": jnp.asarray(prompt[None])}
+        ref = static_generate(rsetup, params, feed, n, kv_scales=scales)
+        refs.append(np.asarray(ref)[0])
+    p_matched = p_total = 0
+    paged_stats = None
+    for flash in (False, True):
+        eng = ServeEngine(
+            cfg,
+            params,
+            n_slots=n_slots,
+            max_len=max_len,
+            mesh=None,
+            kv_cache="paged",
+            page_size=16,
+            kv_scales=kv_scales,
+            flash_decode=flash,
+        )
+        for ref, out in zip(refs, eng.serve(paged_reqs)):
+            p_matched += int(np.sum(np.asarray(ref) == np.asarray(out)))
+            p_total += ref.size
+        paged_stats = eng.cache_stats()
+    dense_float_slot = lm_cache_bytes_per_token(cfg, max_len)
+
     return {
         "workload": "serve_continuous",
         "shape": {
@@ -519,6 +567,13 @@ def _run_serve_continuous(quant, n_slots, n_requests, iters, warmup):
             "energy_nj_per_token": round(energy["total_nj"], 2),
             "energy_compute_nj_per_token": round(energy["compute_nj"], 2),
             "energy_memory_nj_per_token": round(energy["memory_nj"], 2),
+            "cache_bytes_per_token": paged_stats["bytes_per_token"],
+            "cache_bytes_per_token_dense_float": dense_float_slot,
+            "cache_slot_bytes_paged": round(paged_stats["slot_bytes"], 1),
+            "max_slots_at_fixed_mem": int(
+                n_slots * dense_float_slot // max(paged_stats["slot_bytes"], 1.0)
+            ),
+            "token_match_frac_paged": round(p_matched / p_total, 4),
         },
         "bytes": {"weight_bytes": packed_bytes(params), "float_bytes": float_bytes},
     }

@@ -14,6 +14,10 @@ The public surface:
     for CNNs).
   * :class:`~repro.calib.runner.TapCollector` — the activation-tap
     contract models implement.
+  * :func:`~repro.calib.runner.calibrate_kv_cache` — per-(layer, head)
+    static K/V cache scales for the serve engine's quantized paged
+    cache (DESIGN.md §12), from the same observer pass over the gated
+    ``k_cache`` / ``v_cache`` tap sites.
 """
 from repro.calib.observers import (
     ObserverState,
@@ -32,6 +36,7 @@ from repro.calib.policy import (
 from repro.calib.runner import (
     TapCollector,
     calibrate_cnn,
+    calibrate_kv_cache,
     calibrate_lm,
     collect_stats,
     count_range_reductions,
@@ -47,6 +52,7 @@ __all__ = [
     "attach_errors",
     "build_table",
     "calibrate_cnn",
+    "calibrate_kv_cache",
     "calibrate_lm",
     "collect_stats",
     "count_range_reductions",

@@ -62,6 +62,7 @@ class ObserverState(NamedTuple):
     pair_y2: Array  # f32 scalar: sum b^2
     ch_err: Array  # [C] f32: sum of (Q(x) - x) per trailing channel
     ch_n: Array  # i32 scalar: elements per channel accumulated
+    ch_amax: Array  # [C] f32: running max |x| per trailing channel
 
 
 def init_observer(channels: int) -> ObserverState:
@@ -81,6 +82,7 @@ def init_observer(channels: int) -> ObserverState:
         pair_y2=z,
         ch_err=jnp.zeros((channels,), F32),
         ch_n=zi,
+        ch_amax=jnp.zeros((channels,), F32),
     )
 
 
@@ -144,6 +146,9 @@ def update(
         pair_y2=state.pair_y2 + jnp.sum(jnp.square(b)),
         ch_err=ch_err,
         ch_n=ch_n,
+        ch_amax=jnp.maximum(
+            state.ch_amax, jnp.max(ax.reshape(-1, x.shape[-1]), axis=0)
+        ),
     )
 
 
@@ -158,6 +163,7 @@ class ObserverSummary:
     rho: float  # adjacent-activation Pearson correlation
     hist: np.ndarray  # magnitude histogram (for percentile clipping)
     err_mean: np.ndarray | None  # [C] per-channel E[Q(x) - x], pass 2 only
+    ch_amax: np.ndarray | None = None  # [C] per-channel max |x|
 
     def percentile_amax(self, pct: float) -> float:
         """Smallest magnitude covering ``pct`` % of observed values.
@@ -200,4 +206,5 @@ def summarize(state: ObserverState) -> ObserverSummary:
         rho=float(np.clip(rho, -1.0, 1.0)),
         hist=np.asarray(state.hist),
         err_mean=err_mean,
+        ch_amax=np.asarray(state.ch_amax),
     )

@@ -167,6 +167,57 @@ def calibrate_lm(
     )
 
 
+def calibrate_kv_cache(
+    params: Any,
+    cfg,
+    token_batches: Array,
+    *,
+    bits: int = 8,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Calibrate static per-head K/V cache scales on ``[n, B, S]`` tokens.
+
+    Runs the same one-jit observer scan as :func:`calibrate_lm` over the
+    gated ``k_cache`` / ``v_cache`` tap sites (post-RoPE keys and values,
+    exactly what the serve engine writes to its cache — DESIGN.md §12).
+    The tapped ``[L, B, S, KV, hd]`` stacks are reshaped channels-last to
+    ``[B, S, hd, L*KV]`` so the observers' per-channel running max lands
+    one amax per (layer, kv_head) pair.
+
+    Returns ``(k_scale, v_scale)``, each ``[L, KV]`` float32 — symmetric
+    quantization steps ``amax / (2^(bits-1) - 1)`` ready for
+    ``transformer.init_paged_cache(..., kv_scales=...)`` or
+    ``ServeEngine(kv_scales=...)``. Zero runtime range reductions: the
+    serving path only ever divides by these constants (same static-quant
+    contract as the activation sites, DESIGN.md §6).
+    """
+    from repro.models import transformer
+
+    n_layers = cfg.n_dec_layers or cfg.n_layers
+    n_kv = cfg.n_kv_heads
+
+    def tapped(tokens):
+        tc = TapCollector()
+        transformer.forward(params, cfg, tokens, tap=tc, tap_kv=True)
+
+        def chan(x):  # [L, B, S, KV, hd] -> [B, S, hd, L*KV]
+            x = jnp.transpose(x, (1, 2, 4, 0, 3))
+            return x.reshape(x.shape[0], x.shape[1], x.shape[2], -1)
+
+        return {
+            "k_cache": chan(tc.acts["k_cache"]),
+            "v_cache": chan(tc.acts["v_cache"]),
+        }
+
+    stats = collect_stats(tapped, token_batches)
+    qmax = float(2 ** (bits - 1) - 1)
+
+    def scales(summary: ObserverSummary) -> np.ndarray:
+        amax = np.maximum(np.asarray(summary.ch_amax, np.float32), 1e-8)
+        return (amax.reshape(n_layers, n_kv) / qmax).astype(np.float32)
+
+    return scales(stats["k_cache"]), scales(stats["v_cache"])
+
+
 # ---------------------------------------------------------------------------
 # Evaluation helpers (benchmarks + tests)
 # ---------------------------------------------------------------------------

@@ -4,7 +4,7 @@
 61L d_model=7168 64H (GQA kv=8) expert d_ff=2048 vocab=163840,
 MoE 384e top-8. head_dim = 7168/64 = 112. ~1T total / ~32B active.
 Serving this on one 256-chip v5e pod is only possible with the paper's
-4-bit ELP_BSD weight encoding (see EXPERIMENTS.md §Perf).
+4-bit ELP_BSD weight encoding (see DESIGN.md §2).
 """
 from repro.configs.base import ArchConfig
 

@@ -23,7 +23,12 @@ __all__ = [
     "pdp_reduction",
     "lm_weight_macs_per_token",
     "lm_token_energy",
+    "lm_cache_bytes_per_token",
 ]
+
+# Bytes per element of the dtype strings ArchConfig admits (kept local:
+# this module stays importable without jax).
+_DTYPE_BYTES = {"float32": 4, "bfloat16": 2, "float16": 2}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -115,6 +120,26 @@ def lm_weight_macs_per_token(cfg) -> int:
     if cfg.n_experts:
         ffn *= cfg.topk
     return cfg.n_layers * (attn + ffn) + d * cfg.vocab
+
+
+def lm_cache_bytes_per_token(cfg, max_len: int, *, kv_bits: int = 0) -> int:
+    """Modeled DRAM bytes of KV-cache read per decoded token, per slot.
+
+    Each decode step streams the slot's whole K and V history —
+    ``2 * L * max_len * KV * hd`` elements at full context, the honest
+    worst-case comparator — at the cache element width: the config dtype
+    for the dense float layout, one byte for ``kv_bits=8`` static-int8
+    codes plus the per-(layer, head) float32 scales (DESIGN.md §12).
+    Multiplied by :data:`DRAM_PJ_PER_BYTE` this is the cache term the
+    weight-traffic model of :func:`lm_token_energy` deliberately
+    excludes; the ``serve_continuous`` benchmark reports both.
+    """
+    n_layers = cfg.n_dec_layers or cfg.n_layers
+    kv = cfg.n_kv_heads
+    hd = cfg.head_dim or cfg.d_model // cfg.n_heads
+    elem = 1 if kv_bits else _DTYPE_BYTES[cfg.dtype_str]
+    scale_bytes = 2 * n_layers * kv * 4 if kv_bits else 0
+    return 2 * n_layers * int(max_len) * kv * hd * elem + scale_bytes
 
 
 def lm_token_energy(cfg, params, act_bits: int | None = None) -> dict:

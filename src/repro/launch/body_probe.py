@@ -2,7 +2,7 @@
 
 XLA's ``cost_analysis`` counts a ``while`` body ONCE, so a scanned
 L-layer model under-reports FLOPs/bytes/collectives by ~L×
-(verified experimentally in EXPERIMENTS.md §Dry-run notes). Rather than
+(verified experimentally; see DESIGN.md §7's dry-run notes). Rather than
 hand-computing analytic FLOPs, we lower each cell's *layer body* as its
 own jitted function on the same mesh with the same shardings and let
 XLA measure it; the cell totals are then corrected as

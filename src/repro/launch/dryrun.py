@@ -15,7 +15,7 @@ abstract ShapeDtypeStructs — no allocation — and must succeed on
 It prints ``compiled.memory_analysis()`` (fits-in-HBM evidence) and
 ``compiled.cost_analysis()`` (FLOPs/bytes for §Roofline), parses the
 optimized HLO for collective traffic, and dumps one JSON per cell that
-benchmarks/roofline.py aggregates into EXPERIMENTS.md.
+downstream roofline tooling aggregates (DESIGN.md §7).
 
 Usage:
   python -m repro.launch.dryrun --arch qwen3_8b --shape train_4k

@@ -113,7 +113,7 @@ def cpu_convert_artifact_bytes(hlo_text: str) -> int:
     [L, B, S, D] buffer. A TPU MXU consumes bf16 natively — no such
     buffer exists there. We detect big (>256 MiB) f32 convert results
     feeding from while-loop outputs and report them so memory_analysis
-    can be read TPU-adjusted (see EXPERIMENTS.md §Dry-run notes).
+    can be read TPU-adjusted (see DESIGN.md §7's dry-run notes).
     """
     total = 0
     seen: set[str] = set()

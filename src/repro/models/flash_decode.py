@@ -4,7 +4,7 @@ Baseline decode shards the cache over heads (or head_dim when heads do
 not divide the model axis) — the head_dim fallback makes the QK
 contraction *partial* per shard and XLA inserts a full
 ``[B, H, 1, S]`` f32 all-reduce per layer (measured ~72 GB wire/token
-on qwen3-8b decode_32k; EXPERIMENTS.md §Perf iteration 1).
+on qwen3-8b decode_32k; DESIGN.md §7).
 
 Flash-decoding instead shards the cache SEQUENCE over the model axis:
 each shard computes attention over its seq slice and the shards
@@ -18,6 +18,12 @@ with ``shard_map`` (manual collectives); used when
 ``pctx.flash_decode`` is on and the arch's kv-head count does not
 divide the model axis (divisible archs keep head-sharded decode, which
 is already collective-free).
+
+Paged caches (DESIGN.md §12) feed this path through their LOGICAL
+views: ``_attention`` gathers (and, for int8 codes, dequantizes) the
+``[B, Pmax*page, KV, hd]`` view from the page pool first, then calls
+:func:`flash_decode_attention` on it exactly as for a dense cache — the
+seq-slicing here never sees page boundaries.
 """
 from __future__ import annotations
 

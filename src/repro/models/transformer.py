@@ -10,11 +10,25 @@ Layer stacking uses ``lax.scan`` over parameters stacked on a leading
 depth, which keeps 61-layer × 512-device dry-run compiles tractable and
 is also what a production TPU deployment wants (XLA pipelining across
 scan iterations). Training wraps the body in ``jax.checkpoint`` (full
-remat — the baseline activation-memory policy; see EXPERIMENTS.md §Perf
-for the policy hillclimb).
+remat — the baseline activation-memory policy; DESIGN.md §7 tracks the
+perf iterations on top of it).
 
-KV caches are dicts of ``[L, B, Smax, KV, hd]`` arrays threaded through
-the scan as per-layer xs/ys.
+KV caches are dicts threaded through the scan as per-layer xs/ys, in
+one of four layouts (:func:`stack_apply` dispatches on the dict keys;
+DESIGN.md §9/§12):
+
+  * dense — ``{"k", "v"}`` of ``[L, B, Smax, KV, hd]`` arrays (one
+    private row per batch slot);
+  * dynamic int8 — ``{"k", "v", "ks", "vs"}``: int8 codes plus
+    per-(token, head) float scales computed at write time;
+  * static int8 — ``{"k", "v", "k_scale", "v_scale"}``: int8 codes
+    against per-(layer, head) scales calibrated offline
+    (:func:`repro.calib.runner.calibrate_kv_cache`) — zero runtime
+    range reductions, the §6 contract applied to the cache;
+  * paged — ``{"k", "v", "pages"[, "k_scale", "v_scale"]}``: a shared
+    physical page pool ``[L, n_pages, page, KV, hd]`` addressed through
+    a per-slot page table ``pages[B, Pmax]``; slots serving the same
+    prompt prefix reference the same physical pages (DESIGN.md §12).
 """
 from __future__ import annotations
 
@@ -128,19 +142,35 @@ def _attention(
     rope: tuple[Array, Array] | None,
     causal: bool,
     window: int = 0,
-    kv_cache: tuple[Array, Array] | None = None,
+    kv_cache: tuple[Array, ...] | None = None,
+    kv_layout: str = "dense",
     cache_pos: Array | None = None,
     prefix: str = "w",
     kv_override: Array | None = None,
     pctx: ParallelCtx | None = None,
     acts: dict | None = None,
-) -> tuple[Array, tuple[Array, Array] | None]:
+    tap_kv: bool = False,
+) -> tuple[Array, tuple[Array, ...] | None]:
     """GQA attention, optionally reading/updating a KV cache.
 
+    ``kv_layout`` names the cache tuple's contents (set by
+    :func:`stack_apply` from the cache dict's keys): ``"dense"``
+    ``(ck, cv)``; ``"quant"`` ``(ck, cv, cks, cvs)`` dynamic int8 with
+    per-(token, head) scales; ``"static"`` ``(ck, cv, ksc, vsc)`` int8
+    with calibrated per-head scales ``[KV]``; ``"paged"`` /
+    ``"paged_static"`` ``(ck, cv, pages[, ksc, vsc])`` with a shared
+    physical pool ``ck[P, page, KV, hd]`` addressed through the rows'
+    page table (DESIGN.md §12). Writes always happen before the read
+    (write-before-attend), so each row's own position is valid by the
+    time it is attended.
+
     ``kv_override`` supplies encoder output for cross-attention.
-    Returns (output, updated (k, v) cache or None). ``acts``
+    Returns (output, updated cache tuple or None). ``acts``
     (calibration collection) records the attention mix entering the
-    output projection under ``"attn_mix"``.
+    output projection under ``"attn_mix"``; ``tap_kv`` additionally
+    records the post-RoPE k/v — the exact values a serving cache would
+    store — under ``"k_cache"``/``"v_cache"`` (cache-less calibration
+    forward only; :func:`repro.calib.runner.calibrate_kv_cache`).
     """
     b, s, d = x.shape
     h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
@@ -155,10 +185,12 @@ def _attention(
         cos_q, sin_q, cos_k, sin_k = rope
         q = apply_rope(q, cos_q, sin_q)
         k = apply_rope(k, cos_k, sin_k)
+    if tap_kv and acts is not None:
+        acts["k_cache"] = k
+        acts["v_cache"] = v
 
     new_cache = None
-    k_scales = v_scales = None
-    if kv_cache is not None and len(kv_cache) == 4:
+    if kv_cache is not None and kv_layout == "quant":
         # int8-quantized cache (per-token-head scales)
         ck, cv, cks, cvs = kv_cache
         kq, ksf = _cache_q(k)
@@ -181,6 +213,37 @@ def _attention(
             return matmul(out.reshape(b, s, h * hd), lp[prefix + "o"]), new_cache
         k = _cache_dq(ck, cks, x.dtype)
         v = _cache_dq(cv, cvs, x.dtype)
+    elif kv_cache is not None and kv_layout in ("paged", "paged_static"):
+        # paged pool: write this step's k/v through the page table, then
+        # gather the rows' logical views back for the read. Shared
+        # (prefix) pages are never written: every write lands at a
+        # position >= the row's own prompt length, which the admission
+        # contract keeps inside privately-owned pages (DESIGN.md §12).
+        if kv_layout == "paged_static":
+            ck, cv, pages, ksc, vsc = kv_cache
+            kq = _static_q(k, ksc)
+            vq = _static_q(v, vsc)
+        else:
+            ck, cv, pages = kv_cache
+            kq, vq = k, v
+        ck = _cache_set_paged(ck, kq, cache_pos, pages)
+        cv = _cache_set_paged(cv, vq, cache_pos, pages)
+        new_cache = (ck, cv)
+        k = _paged_view(ck, pages)
+        v = _paged_view(cv, pages)
+        if kv_layout == "paged_static":
+            k = _static_dq(k, ksc, x.dtype)
+            v = _static_dq(v, vsc, x.dtype)
+    elif kv_cache is not None and kv_layout == "static":
+        # calibrated int8 cache: per-(layer, head) scales chosen offline
+        # — quantize-on-write with ZERO runtime range reductions, the
+        # DESIGN.md §6 static-quant contract applied to the cache.
+        ck, cv, ksc, vsc = kv_cache
+        ck = _cache_set(ck, _static_q(k, ksc), cache_pos)
+        cv = _cache_set(cv, _static_q(v, vsc), cache_pos)
+        new_cache = (ck, cv)
+        k = _static_dq(ck, ksc, x.dtype)
+        v = _static_dq(cv, vsc, x.dtype)
     elif kv_cache is not None:
         ck, cv = kv_cache
         ck = _cache_set(ck, k, cache_pos)
@@ -227,12 +290,14 @@ def block_apply(
     rope: tuple[Array, ...] | None,
     causal: bool,
     window: int = 0,
-    kv_cache: tuple[Array, Array] | None = None,
+    kv_cache: tuple[Array, ...] | None = None,
+    kv_layout: str = "dense",
     cache_pos: Array | None = None,
     enc_out: Array | None = None,
     pctx: ParallelCtx | None = None,
     acts: dict | None = None,
-) -> tuple[Array, tuple[Array, Array] | None]:
+    tap_kv: bool = False,
+) -> tuple[Array, tuple[Array, ...] | None]:
     """Pre-norm transformer block: attn + (cross-attn) + FFN/MoE.
 
     ``acts`` (calibration collection, DESIGN.md §6) records the inputs
@@ -261,9 +326,11 @@ def block_apply(
         causal=causal,
         window=window,
         kv_cache=kv_cache,
+        kv_layout=kv_layout,
         cache_pos=cache_pos,
         pctx=pctx,
         acts=acts,
+        tap_kv=tap_kv,
     )
     x = x + attn_out
     if pctx is not None and pctx.seq_parallel and x.shape[1] > 1:
@@ -313,6 +380,7 @@ def stack_apply(
     pctx: ParallelCtx | None = None,
     remat: bool = False,
     collect: bool = False,
+    tap_kv: bool = False,
 ) -> tuple[Array, dict[str, Array] | None]:
     """Run the block stack via ``lax.scan`` over the stacked layer axis.
 
@@ -321,6 +389,15 @@ def stack_apply(
     (``[L, B, S, D]`` residual stream) plus the per-matmul inputs
     ``block_apply`` records (``attn_in``/``attn_mix``/``ffn_in``/
     ``ffn_hidden``) — the calibration runner's view (DESIGN.md §6).
+    ``tap_kv`` adds the post-RoPE ``k_cache``/``v_cache`` sites (the KV
+    cache's write values, stacked ``[L, B, S, KV, hd]``) — gated off by
+    default so the LM calibration site census stays fixed.
+
+    The cache layout is dispatched on the dict's keys (see the module
+    docstring): per-layer leaves (``k``/``v``/``ks``/``vs`` and the
+    static ``k_scale``/``v_scale``) thread through the scan as xs/ys,
+    while the paged ``pages`` table — shared by every layer — is closed
+    over and passed back through the output dict unchanged.
     """
     if collect and cache is not None:
         raise ValueError("collect=True is for the cache-less training forward")
@@ -332,14 +409,24 @@ def stack_apply(
     # same offsets), so one table serves both.
     rope = (cos, sin, cos, sin)
 
-    quant_cache = cache is not None and "ks" in cache
+    layout = "dense" if cache is None else cache_layout(cache)
+    pages = cache["pages"] if layout.startswith("paged") else None
 
     def body(carry, xs):
         xc = carry
         if cache is not None:
-            if quant_cache:
+            if layout == "quant":
                 lp, ck, cv, cks, cvs = xs
                 kvc = (ck, cv, cks, cvs)
+            elif layout == "static":
+                lp, ck, cv, ksc, vsc = xs
+                kvc = (ck, cv, ksc, vsc)
+            elif layout == "paged_static":
+                lp, ck, cv, ksc, vsc = xs
+                kvc = (ck, cv, pages, ksc, vsc)
+            elif layout == "paged":
+                lp, ck, cv = xs
+                kvc = (ck, cv, pages)
             else:
                 lp, ck, cv = xs
                 kvc = (ck, cv)
@@ -351,30 +438,60 @@ def stack_apply(
                 causal=causal,
                 window=window,
                 kv_cache=kvc,
+                kv_layout=layout,
                 cache_pos=cache_pos,
                 enc_out=enc_out,
                 pctx=pctx,
             )
             return out, new_kv
         lp = xs
-        acts: dict | None = {} if collect else None
+        acts: dict | None = {} if (collect or tap_kv) else None
         out, _ = block_apply(
             lp, cfg, xc, rope=rope, causal=causal, window=window, enc_out=enc_out,
-            pctx=pctx, acts=acts,
+            pctx=pctx, acts=acts, tap_kv=tap_kv,
         )
         return out, ({"block_out": out, **acts} if collect else None)
 
     fn = jax.checkpoint(body) if remat else body
     if cache is not None:
-        if quant_cache:
+        if layout == "quant":
             xs = (blocks, cache["k"], cache["v"], cache["ks"], cache["vs"])
             x, kv_out = jax.lax.scan(fn, x, xs)
             return x, {"k": kv_out[0], "v": kv_out[1], "ks": kv_out[2], "vs": kv_out[3]}
+        if layout in ("static", "paged_static"):
+            xs = (blocks, cache["k"], cache["v"], cache["k_scale"], cache["v_scale"])
+            x, kv_out = jax.lax.scan(fn, x, xs)
+            out = {
+                "k": kv_out[0],
+                "v": kv_out[1],
+                "k_scale": cache["k_scale"],
+                "v_scale": cache["v_scale"],
+            }
+            if layout == "paged_static":
+                out["pages"] = pages
+            return x, out
         xs = (blocks, cache["k"], cache["v"])
         x, kv_out = jax.lax.scan(fn, x, xs)
-        return x, {"k": kv_out[0], "v": kv_out[1]}
+        out = {"k": kv_out[0], "v": kv_out[1]}
+        if layout == "paged":
+            out["pages"] = pages
+        return x, out
     x, ys = jax.lax.scan(fn, x, blocks)
     return x, (ys if collect else None)
+
+
+def cache_layout(cache: dict[str, Array]) -> str:
+    """Name a KV-cache dict's layout from its keys (the dispatch
+    :func:`stack_apply` and the serve engine share): ``"dense"``,
+    ``"quant"`` (dynamic int8), ``"static"`` (calibrated int8),
+    ``"paged"`` or ``"paged_static"``."""
+    if "pages" in cache:
+        return "paged_static" if "k_scale" in cache else "paged"
+    if "ks" in cache:
+        return "quant"
+    if "k_scale" in cache:
+        return "static"
+    return "dense"
 
 
 # ---------------------------------------------------------------------------
@@ -403,6 +520,7 @@ def forward(
     pctx: ParallelCtx | None = None,
     remat: bool = False,
     tap=None,
+    tap_kv: bool = False,
 ) -> Array:
     """Training forward: logits ``[B, S(+F), V]`` (float32).
 
@@ -411,7 +529,10 @@ def forward(
     outputs ``[L, B, S, D]``), the stacked per-matmul inputs
     (``"attn_in"``/``"attn_mix"``/``"ffn_in"``/``"ffn_hidden"`` — what
     the calibrated serve path quantizes against, DESIGN.md §6) and
-    ``"final"`` (pre-unembed).
+    ``"final"`` (pre-unembed). ``tap_kv=True`` adds the post-RoPE
+    ``"k_cache"``/``"v_cache"`` sites (``[L, B, S, KV, hd]`` — the
+    values a serving KV cache stores, DESIGN.md §12); it is opt-in so
+    the default LM site census stays exactly the seven sites above.
     """
     x = embed_tokens(params, cfg, tokens, frontend)
     if tap is not None:
@@ -425,6 +546,7 @@ def forward(
         pctx=pctx,
         remat=remat,
         collect=tap is not None,
+        tap_kv=tap_kv,
     )
     if tap is not None:
         tap("blocks", ys.pop("block_out"))
@@ -456,14 +578,35 @@ def loss_fn(
 # Serving: prefill + decode
 # ---------------------------------------------------------------------------
 def init_cache(
-    cfg: ArchConfig, batch: int, max_len: int, dtype=None, quant: bool = False
+    cfg: ArchConfig,
+    batch: int,
+    max_len: int,
+    dtype=None,
+    quant: bool = False,
+    kv_scales: tuple[Array, Array] | None = None,
 ) -> dict[str, Array]:
-    """KV cache. ``quant=True`` stores int8 entries with per-(token,
-    head) float scales — 2x less HBM per read, the §Perf iteration-3
-    lever for cache-bound decode (beyond-paper; the paper quantizes
-    weights, this applies the same storage idea to the cache)."""
+    """Dense (per-slot-row) KV cache ``[L, B, Smax, KV, hd]``.
+
+    ``quant=True`` stores int8 entries with per-(token, head) float
+    scales computed at write time — 2x less HBM per read, but a runtime
+    range reduction per step. ``kv_scales=(k_scale, v_scale)`` (each
+    ``[L, KV]``, from :func:`repro.calib.runner.calibrate_kv_cache`)
+    instead stores int8 codes against CALIBRATED per-(layer, head)
+    scales — 4x less HBM than float and zero runtime range reductions,
+    the DESIGN.md §6 contract applied to the cache (§12). The two quant
+    modes are mutually exclusive."""
     dtype = dtype or cfg.dtype
     shape = (cfg.n_dec_layers or cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.hd)
+    if quant and kv_scales is not None:
+        raise ValueError("quant=True (dynamic) and kv_scales (static) are exclusive")
+    if kv_scales is not None:
+        k_scale, v_scale = kv_scales
+        return {
+            "k": jnp.zeros(shape, jnp.int8),
+            "v": jnp.zeros(shape, jnp.int8),
+            "k_scale": jnp.asarray(k_scale, jnp.float32),
+            "v_scale": jnp.asarray(v_scale, jnp.float32),
+        }
     if quant:
         sshape = shape[:-1] + (1,)
         return {
@@ -473,6 +616,50 @@ def init_cache(
             "vs": jnp.zeros(sshape, jnp.float32),
         }
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def init_paged_cache(
+    cfg: ArchConfig,
+    batch: int,
+    max_len: int,
+    *,
+    page_size: int,
+    n_pages: int | None = None,
+    kv_scales: tuple[Array, Array] | None = None,
+    dtype=None,
+) -> dict[str, Array]:
+    """Paged KV cache (DESIGN.md §12): a shared physical page pool plus
+    a per-slot page table.
+
+    ``k``/``v`` are ``[L, n_pages, page_size, KV, hd]`` — int8 codes
+    when ``kv_scales`` is given (calibrated per-(layer, head) scales,
+    ``[L, KV]`` each), else ``dtype``. ``pages[batch, Pmax]`` maps each
+    slot's logical page ``p`` (positions ``p*page_size ..``) to a
+    physical page; slots admitted with a matching prompt prefix point
+    at the SAME physical pages (:class:`repro.serve.paging.PageTable`
+    owns the refcounts). ``n_pages`` defaults to
+    ``batch * Pmax + batch``: enough for every slot to be fully private
+    plus one reserved scratch page per slot (where a free slot's
+    ride-along decode writes land)."""
+    page_size = int(page_size)
+    if page_size < 1:
+        raise ValueError(f"page_size must be >= 1, got {page_size}")
+    n_layers = cfg.n_dec_layers or cfg.n_layers
+    pmax = -(-max_len // page_size)
+    if n_pages is None:
+        n_pages = batch * pmax + batch
+    shape = (n_layers, n_pages, page_size, cfg.n_kv_heads, cfg.hd)
+    store_dt = jnp.int8 if kv_scales is not None else (dtype or cfg.dtype)
+    cache = {
+        "k": jnp.zeros(shape, store_dt),
+        "v": jnp.zeros(shape, store_dt),
+        "pages": jnp.zeros((batch, pmax), jnp.int32),
+    }
+    if kv_scales is not None:
+        k_scale, v_scale = kv_scales
+        cache["k_scale"] = jnp.asarray(k_scale, jnp.float32)
+        cache["v_scale"] = jnp.asarray(v_scale, jnp.float32)
+    return cache
 
 
 def _cache_set(c: Array, u: Array, pos: Array) -> Array:
@@ -500,6 +687,43 @@ def _cache_set(c: Array, u: Array, pos: Array) -> Array:
     return c.at[rows, cols].set(u)
 
 
+def _cache_set_paged(c: Array, u: Array, pos: Array, pages: Array) -> Array:
+    """Write ``u[B, s, KV, hd]`` into the physical page pool
+    ``c[P, page, KV, hd]`` through the rows' page table ``pages[B, Pmax]``.
+
+    Row ``b``'s token at logical position ``p`` lands in physical page
+    ``pages[b, p // page_size]`` at offset ``p % page_size`` — the paged
+    analogue of :func:`_cache_set`'s per-row scatter. Distinct rows
+    never scatter into the same physical page: shared (refcount > 1)
+    pages hold only full prompt-prefix positions, strictly below every
+    sharer's write position (DESIGN.md §12's copy-on-write contract),
+    and each free slot's table points at its own reserved scratch page.
+    """
+    pos = jnp.asarray(pos)
+    b, s = u.shape[0], u.shape[1]
+    page = c.shape[1]
+    if pos.ndim == 0:
+        positions = jnp.broadcast_to(pos + jnp.arange(s)[None, :], (b, s))
+    else:
+        positions = pos[:, None] + jnp.arange(s)[None, :]
+    pidx = jnp.take_along_axis(pages, positions // page, axis=1)  # [B, s]
+    poff = positions % page
+    return c.at[pidx, poff].set(u.astype(c.dtype))
+
+
+def _paged_view(c: Array, pages: Array) -> Array:
+    """Gather the rows' logical dense views out of the page pool:
+    ``c[P, page, KV, hd]`` + ``pages[B, Pmax]`` →
+    ``[B, Pmax*page, KV, hd]``. Logical position ``p`` of row ``b`` is
+    element ``p`` of the view, so the mask-past-pos read contract is
+    unchanged from the dense layout (positions beyond the row's depth
+    hold garbage and are masked, exactly as dense slot reuse relies on).
+    """
+    v = c[pages]  # [B, Pmax, page, KV, hd]
+    b, pmax, page = v.shape[:3]
+    return v.reshape(b, pmax * page, *v.shape[3:])
+
+
 def _cache_q(x: Array) -> tuple[Array, Array]:
     """Symmetric int8 quantization over head_dim: x[B,S,KV,hd]."""
     sf = jnp.max(jnp.abs(x.astype(F32)), axis=-1, keepdims=True) / 127.0 + 1e-12
@@ -509,6 +733,17 @@ def _cache_q(x: Array) -> tuple[Array, Array]:
 
 def _cache_dq(q: Array, sf: Array, dtype) -> Array:
     return (q.astype(F32) * sf).astype(dtype)
+
+
+def _static_q(x: Array, scale: Array) -> Array:
+    """Symmetric int8 quantization of ``x[B, S, KV, hd]`` against
+    calibrated per-head scales ``scale[KV]`` — no runtime reduction."""
+    sf = scale[None, None, :, None].astype(F32)
+    return jnp.clip(jnp.round(x.astype(F32) / sf), -127, 127).astype(jnp.int8)
+
+
+def _static_dq(q: Array, scale: Array, dtype) -> Array:
+    return (q.astype(F32) * scale[None, None, :, None].astype(F32)).astype(dtype)
 
 
 def prefill(

@@ -188,15 +188,34 @@ def cache_spec(
     mesh: Mesh,
     model_axis: str = "model",
     prefer_seq: bool = False,
+    paged: bool = False,
 ) -> P:
     """KV / recurrent-state cache layout.
 
     [L, B, S, KV, hd]-style tensors: batch→data axes, then heads→model
     if they divide, else head_dim→model, else seq→model. With
-    ``prefer_seq`` (flash-decoding layout, §Perf) the SEQ dim takes the
-    model axis directly. Recurrent states [L, B, ...]: batch→data,
-    widest trailing dim→model.
+    ``prefer_seq`` (flash-decoding layout, DESIGN.md §7) the SEQ dim
+    takes the model axis directly. Recurrent states [L, B, ...]:
+    batch→data, widest trailing dim→model.
+
+    Paged caches (DESIGN.md §12) are dispatched by leaf name: the
+    ``pages`` table and the static ``k_scale``/``v_scale`` tensors are
+    replicated (host-refreshed / tiny), and the pool's
+    [L, n_pages, page, KV, hd] leaves shard only heads→model (else
+    head_dim→model) — never the page dims, which every row's gather
+    indexes freely, and never batch, which the pool doesn't have.
     """
+    name, _ = _leaf_name(path)
+    if name in ("pages", "k_scale", "v_scale"):
+        return P(*([None] * len(shape)))
+    msize_ = mesh.shape[model_axis]
+    if paged:
+        spec: list[Any] = [None] * len(shape)
+        for d in (len(shape) - 2, len(shape) - 1):  # KV heads, then head_dim
+            if d > 1 and shape[d] % msize_ == 0 and shape[d] >= msize_:
+                spec[d] = model_axis
+                break
+        return P(*spec)
     ba = batch_axes(mesh)
     nb = int(np.prod([mesh.shape[a] for a in ba]))
     msize = mesh.shape[model_axis]
@@ -224,8 +243,10 @@ def cache_spec(
 def cache_specs_tree(
     abstract_cache: Any, mesh: Mesh, model_axis: str = "model", prefer_seq: bool = False
 ) -> Any:
+    paths = jax.tree_util.tree_flatten_with_path(abstract_cache)[0]
+    paged = any(_leaf_name(p)[0] == "pages" for p, _ in paths)
     return jax.tree_util.tree_map_with_path(
-        lambda path, l: cache_spec(path, l.shape, mesh, model_axis, prefer_seq),
+        lambda path, l: cache_spec(path, l.shape, mesh, model_axis, prefer_seq, paged),
         abstract_cache,
     )
 

@@ -15,6 +15,11 @@ Public surface:
     :func:`~repro.serve.engine.build_verify_step` — the speculative
     round's two jits: the scanned W-step draft loop and the W-wide
     verify (argmax + acceptance counting fused; DESIGN.md §10).
+  * :class:`~repro.serve.paging.PageTable` /
+    :func:`~repro.serve.engine.build_paged_prefill` — the paged
+    quantized KV cache's host-side page allocator (refcounted
+    copy-on-write prefix sharing) and its suffix-prefill admission jit
+    (DESIGN.md §12).
 """
 from repro.serve.engine import (
     ENGINE_FAMILIES,
@@ -23,15 +28,18 @@ from repro.serve.engine import (
     batch_generate,
     build_draft_run,
     build_greedy_decode,
+    build_paged_prefill,
     build_serve_fns,
     build_slot_prefill,
     build_verify_step,
     static_generate,
 )
+from repro.serve.paging import PageTable
 from repro.serve.scheduler import Request, SlotScheduler
 
 __all__ = [
     "ENGINE_FAMILIES",
+    "PageTable",
     "Request",
     "ServeEngine",
     "ServeSetup",
@@ -39,6 +47,7 @@ __all__ = [
     "batch_generate",
     "build_draft_run",
     "build_greedy_decode",
+    "build_paged_prefill",
     "build_serve_fns",
     "build_slot_prefill",
     "build_verify_step",

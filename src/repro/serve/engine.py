@@ -9,21 +9,43 @@ once. A finished request's slot is immediately reusable — no
 re-prefill of live slots, no padding of short prompts to the batch
 maximum.
 
-Correctness invariants (tested in ``tests/test_serve_engine.py``):
+The cache itself comes in two layouts. ``kv_cache="dense"`` is the
+classic ``[L, n_slots, max_len, KV, hd]`` stripe-per-slot tensor.
+``kv_cache="paged"`` (DESIGN.md §12) replaces it with a pool of
+fixed-size pages addressed through a host-authoritative per-slot page
+table (:class:`repro.serve.paging.PageTable`): K/V is optionally
+quantized on write to int8 against static per-(layer, head) scales
+calibrated by :func:`repro.calib.calibrate_kv_cache`, and admissions
+whose prompt prefix exactly matches an indexed page chain reference
+those pages copy-on-write-style (refcounted, freed when the last
+reader finishes) — a shared system prompt is prefilled once, and only
+its suffix per request.
+
+Correctness invariants (tested in ``tests/test_serve_engine.py`` and
+``tests/test_paging.py``):
 
   * **slot isolation** — decode-step cache writes are per-row
-    (``models/transformer._cache_set`` with a vector position): slot
-    ``b`` writes only row ``b`` of the cache, at its own position;
+    (``models/transformer._cache_set`` with a vector position, or
+    ``_cache_set_paged`` routing each row through its own page-table
+    row): slot ``b`` writes only its own pages/row, at its own
+    position;
   * **mask-past-pos** — attention reads ``kpos <= pos[slot]``, so a
     reused slot's stale entries from the previous occupant are never
     attended: every position ``<= pos`` has been written by the current
     request (prefill covers ``[0, S)``, each decode writes its own
-    position before attending to it);
+    position before attending to it). The paged gather reproduces the
+    dense logical view position-for-position, so the same argument
+    covers page reuse — and shared prefix pages hold only positions
+    strictly below every sharer's write positions, so they are
+    immutable while referenced;
   * **token parity** — greedy continuous output is token-identical to
     per-request static generation: per-row math is independent of what
     the other slots are doing, masked positions contribute exactly zero
     to the softmax, and the admission prefill runs at the request's
-    exact prompt length.
+    exact prompt length. The quantized paged engine is token-identical
+    to the dense static-int8 reference
+    (``static_generate(kv_scales=...)``): same codes, same scales,
+    paging changes addressing only.
 
 Weights: a packed tree (``PackedWeight`` leaves) is consumed directly by
 the jitted decode step — codes enter the graph as uint8 and decode
@@ -94,6 +116,11 @@ class ServeSetup:
     batch: int
     moe_impl: str = "ep"
     flash_decode: bool = False
+    # paged KV cache geometry (DESIGN.md §12): page_size=0 keeps the
+    # dense [L, B, max_len, KV, hd] layout; kv_bits=8 stores int8 codes
+    # against static per-(layer, head) scales.
+    page_size: int = 0
+    kv_bits: int = 0
 
     def pctx(self) -> ParallelCtx | None:
         if self.mesh is None:
@@ -122,6 +149,43 @@ def _abstract_params(setup: ServeSetup, api: ModelApi, aparams):
     return jax.eval_shape(lambda: api.init_params(setup.cfg, jax.random.PRNGKey(0)))
 
 
+def _abstract_cache(setup: ServeSetup, api: ModelApi):
+    """Abstract cache tree for the setup's layout (DESIGN.md §9/§12).
+
+    ``page_size`` selects the paged pool + page-table layout; with
+    ``kv_bits`` the pool holds int8 codes and the tree carries
+    placeholder ``[L, KV]`` static scales (only shapes matter here — the
+    real calibrated scales live in the engine's cache). ``kv_bits``
+    without ``page_size`` is the dense static-int8 layout
+    (:func:`static_generate`'s quantized reference path).
+    """
+    cfg = setup.cfg
+    if setup.page_size or setup.kv_bits:
+        from repro.models import transformer
+
+        n_layers = cfg.n_dec_layers or cfg.n_layers
+        scales = None
+        if setup.kv_bits:
+            s = jnp.ones((n_layers, cfg.n_kv_heads), jnp.float32)
+            scales = (s, s)
+        if setup.page_size:
+            return jax.eval_shape(
+                lambda: transformer.init_paged_cache(
+                    cfg,
+                    setup.batch,
+                    setup.max_len,
+                    page_size=setup.page_size,
+                    kv_scales=scales,
+                )
+            )
+        return jax.eval_shape(
+            lambda: transformer.init_cache(
+                cfg, setup.batch, setup.max_len, kv_scales=scales
+            )
+        )
+    return jax.eval_shape(lambda: api.init_cache(cfg, setup.batch, setup.max_len))
+
+
 def build_serve_fns(setup: ServeSetup, api: ModelApi | None = None, aparams: Any = None):
     """Jitted (prefill, decode) pair for a whole-batch serving step.
 
@@ -146,7 +210,7 @@ def build_serve_fns(setup: ServeSetup, api: ModelApi | None = None, aparams: Any
     mesh = setup.mesh
     ap = _abstract_params(setup, api, aparams)
     pspecs = shr.param_specs(ap, mesh)
-    acache = jax.eval_shape(lambda: api.init_cache(cfg, setup.batch, setup.max_len))
+    acache = _abstract_cache(setup, api)
     cspecs = shr.cache_specs_tree(acache, mesh, prefer_seq=setup.flash_decode)
     tok_spec = shr.input_spec((setup.batch, 1), mesh)
 
@@ -210,7 +274,43 @@ def build_slot_prefill(setup: ServeSetup, api: ModelApi | None = None, aparams: 
     mesh = setup.mesh
     ap = _abstract_params(setup, api, aparams)
     pspecs = shr.param_specs(ap, mesh)
-    acache = jax.eval_shape(lambda: api.init_cache(cfg, setup.batch, setup.max_len))
+    acache = _abstract_cache(setup, api)
+    cspecs = shr.cache_specs_tree(acache, mesh, prefer_seq=setup.flash_decode)
+    return jax.jit(
+        prefill_slot,
+        in_shardings=(shr.named(mesh, pspecs), None, shr.named(mesh, cspecs), None),
+        out_shardings=(NamedSharding(mesh, P()), shr.named(mesh, cspecs)),
+        donate_argnums=(2,),
+    )
+
+
+def build_paged_prefill(setup: ServeSetup, api: ModelApi | None = None, aparams: Any = None):
+    """Jitted admission step for the PAGED cache (DESIGN.md §12).
+
+    ``prefill_slot(params, tokens[1, s], cache, pos0[1]) -> (logits[1,
+    V], cache)`` runs the prompt *suffix* — the tokens past the shared
+    prefix the :class:`~repro.serve.paging.PageTable` matched — as one
+    causal run starting at position ``pos0``, writing K/V through the
+    batch-1 ``pages`` row the engine injects for the admitted slot. No
+    tree slicing: the physical pool is shared by all slots, and the page
+    table alone scopes the writes, so live slots are untouched exactly
+    as in :func:`build_slot_prefill`. One compilation per distinct
+    suffix length.
+    """
+    api = api or get_model(setup.cfg)
+    cfg = setup.cfg
+    pctx = setup.pctx()
+
+    def prefill_slot(params, tokens, cache, pos0):
+        logits, cache = api.decode_step(params, cfg, tokens, cache, pos0, pctx=pctx)
+        return logits[:, -1], cache
+
+    if setup.mesh is None:
+        return jax.jit(prefill_slot)
+    mesh = setup.mesh
+    ap = _abstract_params(setup, api, aparams)
+    pspecs = shr.param_specs(ap, mesh)
+    acache = _abstract_cache(setup, api)
     cspecs = shr.cache_specs_tree(acache, mesh, prefer_seq=setup.flash_decode)
     return jax.jit(
         prefill_slot,
@@ -243,7 +343,7 @@ def build_greedy_decode(setup: ServeSetup, api: ModelApi | None = None, aparams:
     mesh = setup.mesh
     ap = _abstract_params(setup, api, aparams)
     pspecs = shr.param_specs(ap, mesh)
-    acache = jax.eval_shape(lambda: api.init_cache(cfg, setup.batch, setup.max_len))
+    acache = _abstract_cache(setup, api)
     cspecs = shr.cache_specs_tree(acache, mesh, prefer_seq=setup.flash_decode)
     tok_spec = shr.input_spec((setup.batch, 1), mesh)
     return jax.jit(
@@ -293,7 +393,7 @@ def build_draft_run(setup: ServeSetup, api: ModelApi | None = None, aparams: Any
     mesh = setup.mesh
     ap = _abstract_params(setup, api, aparams)
     pspecs = shr.param_specs(ap, mesh)
-    acache = jax.eval_shape(lambda: api.init_cache(cfg, setup.batch, setup.max_len))
+    acache = _abstract_cache(setup, api)
     cspecs = shr.cache_specs_tree(acache, mesh, prefer_seq=setup.flash_decode)
     tok_spec = shr.input_spec((setup.batch, 1), mesh)
     return jax.jit(
@@ -352,7 +452,7 @@ def build_verify_step(setup: ServeSetup, api: ModelApi | None = None, aparams: A
     mesh = setup.mesh
     ap = _abstract_params(setup, api, aparams)
     pspecs = shr.param_specs(ap, mesh)
-    acache = jax.eval_shape(lambda: api.init_cache(cfg, setup.batch, setup.max_len))
+    acache = _abstract_cache(setup, api)
     cspecs = shr.cache_specs_tree(acache, mesh, prefer_seq=setup.flash_decode)
     tok_spec = shr.input_spec((setup.batch, 1), mesh)
     return jax.jit(
@@ -384,6 +484,7 @@ def static_generate(
     *,
     greedy: bool = True,
     key: Array | None = None,
+    kv_scales: tuple[Array, Array] | None = None,
 ) -> Array:
     """Greedy/sampled generation for a static (lockstep) batch of prompts.
 
@@ -394,10 +495,25 @@ def static_generate(
     ``serve_continuous`` benchmark baseline compare against, (b) the
     path for families/options the slot engine does not cover
     (recurrent/enc-dec/frontend archs, legacy whole-batch sampling).
+
+    ``kv_scales`` (calibrated ``([L, KV], [L, KV])`` —
+    :func:`repro.calib.calibrate_kv_cache`) switches the cache to the
+    dense static-int8 layout: the quantized reference the paged
+    engine's token-identity tests compare against (same codes, no
+    paging).
     """
     api = get_model(setup.cfg)
+    if kv_scales is not None and not setup.kv_bits:
+        setup = dataclasses.replace(setup, kv_bits=8)
     prefill_j, decode_j = build_serve_fns(setup, api, aparams=jax.eval_shape(lambda: params))
-    cache = api.init_cache(setup.cfg, setup.batch, setup.max_len)
+    if kv_scales is not None:
+        from repro.models import transformer
+
+        cache = transformer.init_cache(
+            setup.cfg, setup.batch, setup.max_len, kv_scales=kv_scales
+        )
+    else:
+        cache = api.init_cache(setup.cfg, setup.batch, setup.max_len)
     logits, cache = prefill_j(params, batch, cache)
     pos = batch["tokens"].shape[1] + (
         batch["frontend"].shape[1] if setup.cfg.family == "vlm" and "frontend" in batch else 0
@@ -509,7 +625,21 @@ class ServeEngine:
         reaching it is finished early and flagged ``truncated``.
       mesh: ``"auto"`` (elastic mesh over the alive devices when more
         than one is visible), an explicit ``Mesh``, or ``None``.
-      flash_decode: sequence-sharded flash-decoding cache layout (§Perf).
+      flash_decode: sequence-sharded flash-decoding cache layout
+        (DESIGN.md §7); composes with the paged layout (the decode step
+        gathers the logical view first, then flash-attends it).
+      kv_cache: ``"dense"`` (default) or ``"paged"`` — the paged pool +
+        page-table layout with copy-on-write prefix sharing
+        (DESIGN.md §12).
+      page_size: tokens per page for ``kv_cache="paged"`` (default 16).
+        Smaller pages share shorter prefixes at more table overhead.
+      kv_bits: 8 to store the paged pool as int8 codes against static
+        calibrated scales (0 = float, the default). Requires
+        ``kv_cache="paged"`` and ``kv_scales``; inferred as 8 when
+        ``kv_scales`` is passed alone.
+      kv_scales: the calibrated ``(k_scale, v_scale)`` pair, each
+        ``[L, KV]`` float32, from
+        :func:`repro.calib.calibrate_kv_cache`.
       monitor: a :class:`StragglerMonitor` (one is created by default);
         every decode step's wall-clock is recorded.
       draft_params: optional second (aggressively low-bit, e.g. elp4)
@@ -556,6 +686,10 @@ class ServeEngine:
         mesh: Mesh | str | None = "auto",
         target_model: int = 16,
         flash_decode: bool = False,
+        kv_cache: str = "dense",
+        page_size: int = 16,
+        kv_bits: int = 0,
+        kv_scales: Any = None,
         moe_impl: str | None = None,
         monitor: StragglerMonitor | None = None,
         draft_params: Any = None,
@@ -575,6 +709,30 @@ class ServeEngine:
             raise ValueError(
                 "ServeEngine requests are token-only; frontend (vlm/audio) prompts "
                 "serve through repro.serve.static_generate"
+            )
+        if kv_cache not in ("dense", "paged"):
+            raise ValueError(f'kv_cache must be "dense" or "paged", got {kv_cache!r}')
+        self._paged = kv_cache == "paged"
+        if kv_scales is not None and not kv_bits:
+            kv_bits = 8
+        if kv_bits and not self._paged:
+            raise ValueError(
+                "quantized KV cache requires kv_cache='paged' — the dense engine "
+                "cache keeps the float layout (the dense static-int8 reference "
+                "runs through repro.serve.static_generate(kv_scales=...))"
+            )
+        if kv_bits and kv_bits != 8:
+            raise ValueError(
+                f"kv_bits={kv_bits}: the cache stores int8 codes, so serving "
+                "bit-width is 8 (calibrate scales for other widths with "
+                "repro.calib.calibrate_kv_cache(bits=...) for analysis only)"
+            )
+        if kv_bits and kv_scales is None:
+            raise ValueError(
+                "kv_bits without kv_scales: static cache quantization needs "
+                "calibrated per-(layer, head) scales — run "
+                "repro.calib.calibrate_kv_cache(params, cfg, token_batches) and "
+                "pass the (k_scale, v_scale) pair"
             )
         self.spec_k = int(spec_k)
         self.spec_draft = str(spec_draft)
@@ -618,6 +776,8 @@ class ServeEngine:
             batch=n_slots,
             moe_impl=moe_impl or ("ep" if mesh is not None else "dense"),
             flash_decode=flash_decode,
+            page_size=int(page_size) if self._paged else 0,
+            kv_bits=int(kv_bits),
         )
         self._api = get_model(cfg)
         aparams = jax.eval_shape(lambda: params)
@@ -627,10 +787,31 @@ class ServeEngine:
             self.pspecs = shr.param_specs(aparams, mesh)
             params = reshard(params, mesh, self.pspecs)
         self.params = params
-        self._prefill = build_slot_prefill(self.setup, self._api, aparams=aparams)
+        if self._paged:
+            self._prefill = build_paged_prefill(self.setup, self._api, aparams=aparams)
+        else:
+            self._prefill = build_slot_prefill(self.setup, self._api, aparams=aparams)
         _, self._decode = build_serve_fns(self.setup, self._api, aparams=aparams)
         self._decode_greedy = build_greedy_decode(self.setup, self._api, aparams=aparams)
-        cache = self._api.init_cache(cfg, n_slots, max_len)
+        if self._paged:
+            from repro.models import transformer
+            from repro.serve.paging import PageTable
+
+            scales = None
+            if kv_bits:
+                scales = (
+                    jnp.asarray(kv_scales[0], jnp.float32),
+                    jnp.asarray(kv_scales[1], jnp.float32),
+                )
+            cache = transformer.init_paged_cache(
+                cfg, n_slots, max_len, page_size=self.setup.page_size, kv_scales=scales
+            )
+            self._pager = PageTable(
+                n_slots, max_len, self.setup.page_size, n_pages=cache["k"].shape[1]
+            )
+        else:
+            cache = self._api.init_cache(cfg, n_slots, max_len)
+            self._pager = None
         if mesh is not None:
             cspecs = shr.cache_specs_tree(
                 jax.eval_shape(lambda: cache), mesh, prefer_seq=flash_decode
@@ -656,11 +837,27 @@ class ServeEngine:
                     self.draft_params = reshard(
                         draft_params, mesh, shr.param_specs(adraft, mesh)
                     )
-                self._draft_prefill = build_slot_prefill(
-                    self.setup, self._api, aparams=adraft
-                )
+                if self._paged:
+                    # the draft tier gets its OWN physical pool but maps
+                    # it through the SAME page table: logical positions
+                    # coincide, so shared-prefix admissions skip the
+                    # draft prefill of those pages too
+                    self._draft_prefill = build_paged_prefill(
+                        self.setup, self._api, aparams=adraft
+                    )
+                    dcache = transformer.init_paged_cache(
+                        cfg,
+                        n_slots,
+                        max_len,
+                        page_size=self.setup.page_size,
+                        kv_scales=scales,
+                    )
+                else:
+                    self._draft_prefill = build_slot_prefill(
+                        self.setup, self._api, aparams=adraft
+                    )
+                    dcache = self._api.init_cache(cfg, n_slots, max_len)
                 self._draft_run = build_draft_run(self.setup, self._api, aparams=adraft)
-                dcache = self._api.init_cache(cfg, n_slots, max_len)
                 if mesh is not None:
                     dcache = jax.device_put(dcache, shr.named(mesh, cspecs))
                 self._draft_cache = dcache
@@ -688,6 +885,10 @@ class ServeEngine:
         self._m_tokens = m.counter("serve.tokens_total")
         self._m_finished = m.counter("serve.requests_finished_total")
         self._m_energy = m.counter("serve.energy_nj_total")
+        # paged-cache occupancy (DESIGN.md §12): refreshed each step
+        self._m_pages_used = m.gauge("serve.cache.pages_used")
+        self._m_pages_shared = m.gauge("serve.cache.pages_shared")
+        self._m_prefix_hits = m.counter("serve.cache.prefix_hits_total")
         self.energy = lm_token_energy(cfg, params)
         self._draft_energy = (
             lm_token_energy(cfg, self.draft_params)
@@ -722,7 +923,18 @@ class ServeEngine:
 
     # -- request lifecycle ---------------------------------------------------
     def submit(self, tokens, max_new_tokens: int, *, key=None) -> int:
-        """Queue one request; returns its id (results via :meth:`result`)."""
+        """Queue one request; returns its id (results via :meth:`result`).
+
+        Admission happens inside :meth:`step` when a slot frees up. On
+        the dense cache that is one prompt-length prefill into the
+        slot's row; on the paged cache the allocator first matches the
+        prompt's full pages against the shared-prefix index
+        (acquiring refcounts — ``stats()["cache"]["prefix_hits"]``
+        counts the pages skipped this way), allocates private pages for
+        the rest, and prefills only the unmatched suffix. Either way
+        the request's first emitted token comes from that admission
+        dispatch, so TTFT is one prefill regardless of sharing.
+        """
         prompt = np.asarray(tokens, np.int32).reshape(-1)
         if prompt.size == 0:
             raise ValueError("empty prompt")
@@ -767,6 +979,8 @@ class ServeEngine:
             slot = req.slot
             self._sched.finish(slot)
             self._pos[slot] = 0
+            if self._paged:
+                self._pager.release(slot)
         else:
             self._sched.cancel(req)
         req.truncated = True
@@ -799,9 +1013,30 @@ class ServeEngine:
         progressed = False
         for slot, req in self._sched.ready():
             req.t_admit = time.perf_counter()
-            logits, self._cache = self._prefill(
-                self.params, jnp.asarray(req.prompt[None]), self._cache, jnp.int32(slot)
-            )
+            if self._paged:
+                # page-table admission (DESIGN.md §12): acquire the
+                # matched shared-prefix pages, allocate the rest, and
+                # prefill only the unmatched SUFFIX as one causal run
+                # starting past the shared tokens. The batch-1 pages row
+                # scopes the writes; no other slot's pages appear in it.
+                n_shared = self._pager.admit(slot, req.prompt)
+                self._m_prefix_hits.inc(n_shared // self.setup.page_size)
+                # np.array COPIES: jnp.asarray can zero-copy-alias a
+                # host numpy buffer on CPU, and the allocator mutates
+                # `table` in place on the next admit/release while the
+                # async dispatch may not have read this view yet
+                row = jnp.asarray(np.array(self._pager.table[slot : slot + 1]))
+                pos0 = jnp.asarray([n_shared], jnp.int32)
+                suffix = jnp.asarray(req.prompt[None, n_shared:])
+                logits, newc = self._prefill(
+                    self.params, suffix, {**self._cache, "pages": row}, pos0
+                )
+                self._cache = {**newc, "pages": jnp.asarray(np.array(self._pager.table))}
+                self._pager.register(slot, req.prompt)
+            else:
+                logits, self._cache = self._prefill(
+                    self.params, jnp.asarray(req.prompt[None]), self._cache, jnp.int32(slot)
+                )
             self._prefills += 1
             if self.spec_k and self.spec_draft == "model":
                 # the draft tier keeps its own cache in lockstep: same
@@ -809,12 +1044,24 @@ class ServeEngine:
                 # every EMITTED token, including the prefill token below,
                 # comes from the verify tier, which is what makes the
                 # output token-identical to non-speculative serving.
-                _, self._draft_cache = self._draft_prefill(
-                    self.draft_params,
-                    jnp.asarray(req.prompt[None]),
-                    self._draft_cache,
-                    jnp.int32(slot),
-                )
+                if self._paged:
+                    _, newdc = self._draft_prefill(
+                        self.draft_params,
+                        suffix,
+                        {**self._draft_cache, "pages": row},
+                        pos0,
+                    )
+                    self._draft_cache = {
+                        **newdc,
+                        "pages": jnp.asarray(np.array(self._pager.table)),
+                    }
+                else:
+                    _, self._draft_cache = self._draft_prefill(
+                        self.draft_params,
+                        jnp.asarray(req.prompt[None]),
+                        self._draft_cache,
+                        jnp.int32(slot),
+                    )
             if req.key is None and self.spec_k and self.spec_draft == "ngram":
                 # the lookup drafter chains from the pending token's
                 # VALUE, so admission syncs it (one scalar fetch riding
@@ -854,6 +1101,9 @@ class ServeEngine:
 
         self._m_queue.set(self._sched.queued)
         self._m_live.set(len(self._sched.live))
+        if self._paged:
+            self._m_pages_used.set(self._pager.pages_used)
+            self._m_pages_shared.set(self._pager.pages_shared)
         live = self._sched.live
         if live and self.spec_k:
             self._spec_round(live)
@@ -866,10 +1116,11 @@ class ServeEngine:
             # (async) decode may not have read it yet
             pos = jnp.asarray(np.array(self._pos))
             n_live = len(live)  # snapshot: _maybe_finish pops from live
+            cache_in = self._dispatch_cache()
             t0 = time.perf_counter()
             if all(r.key is None for r in live.values()):
                 nxt, self._cache = self._decode_greedy(
-                    self.params, self._tok_dev, self._cache, pos
+                    self.params, self._tok_dev, cache_in, pos
                 )
                 self._tok_dev = nxt
                 # dispatch-clocked: once the device queue back-pressures,
@@ -884,7 +1135,7 @@ class ServeEngine:
                     self._maybe_finish(slot, req)
             else:
                 logits, self._cache = self._decode(
-                    self.params, self._tok_dev, self._cache, pos
+                    self.params, self._tok_dev, cache_in, pos
                 )
                 logits = np.asarray(jax.block_until_ready(logits))
                 dt = time.perf_counter() - t0
@@ -956,16 +1207,71 @@ class ServeEngine:
         return [self.release(r) for r in rids]
 
     # -- introspection -------------------------------------------------------
+    def cache_stats(self) -> dict:
+        """KV-cache layout, occupancy and byte costs (DESIGN.md §12).
+
+        Always returns the same key set, so dashboards diff layouts:
+
+        * ``layout`` / ``kv_bits`` / ``page_size`` — the configured
+          geometry (``"dense"`` reports ``page_size=0``);
+        * ``pages_total`` / ``pages_used`` / ``pages_shared`` /
+          ``prefix_hits`` — page-pool occupancy and the running count of
+          shared-prefix pages acquired by admissions (all 0 for dense);
+        * ``bytes_per_token`` — modeled DRAM bytes of cache read per
+          decoded token at full context (codes + static scales for the
+          quantized layout, measured from the cache arrays' dtypes);
+        * ``slot_bytes`` — cache bytes one slot *holds*: the dense slot
+          stripe, or (paged) the measured average of privately
+          allocated pages per admission times the page byte size — the
+          number the ``max_slots_at_fixed_mem`` benchmark entry divides
+          by, and where prefix sharing shows up as savings.
+        """
+        cfg, setup = self.cfg, self.setup
+        n_layers = cfg.n_dec_layers or cfg.n_layers
+        elem = self._cache["k"].dtype.itemsize
+        token_bytes = 2 * n_layers * cfg.n_kv_heads * cfg.hd * elem
+        scale_bytes = 2 * n_layers * cfg.n_kv_heads * 4 if setup.kv_bits else 0
+        if self._paged:
+            pg = self._pager
+            page_bytes = token_bytes * setup.page_size
+            private = pg.pages_allocated / pg.admissions if pg.admissions else pg.pmax
+            return {
+                "layout": "paged",
+                "kv_bits": setup.kv_bits,
+                "page_size": setup.page_size,
+                "pages_total": pg.pages_total,
+                "pages_used": pg.pages_used,
+                "pages_shared": pg.pages_shared,
+                "prefix_hits": pg.prefix_hits,
+                "bytes_per_token": token_bytes * setup.max_len + scale_bytes,
+                "slot_bytes": private * page_bytes,
+            }
+        return {
+            "layout": "dense",
+            "kv_bits": 0,
+            "page_size": 0,
+            "pages_total": 0,
+            "pages_used": 0,
+            "pages_shared": 0,
+            "prefix_hits": 0,
+            "bytes_per_token": token_bytes * setup.max_len,
+            "slot_bytes": token_bytes * setup.max_len,
+        }
+
     def stats(self) -> dict:
         """Serving counters + the straggler monitor's slow-step report.
 
-        Under speculative serving the dict gains a ``"speculative"``
-        sub-dict (drafted/accepted counts and the aggregate acceptance
-        rate), and the same acceptance fields are folded into the
-        ``"straggler"`` report — a slow round and a rejected round look
-        identical in wall-clock, so the two diagnostics read together.
+        Always includes a ``"cache"`` sub-dict (:meth:`cache_stats`:
+        layout, page occupancy, prefix-hit counts, modeled cache bytes
+        per token). Under speculative serving the dict gains a
+        ``"speculative"`` sub-dict (drafted/accepted counts and the
+        aggregate acceptance rate), and the same acceptance fields are
+        folded into the ``"straggler"`` report — a slow round and a
+        rejected round look identical in wall-clock, so the two
+        diagnostics read together.
         """
         st = {
+            "cache": self.cache_stats(),
             "steps": self.steps,
             "decode_steps": self._decode_steps,
             "prefills": self._prefills,
@@ -1026,6 +1332,23 @@ class ServeEngine:
         return compiled_cost(lowered.compile())
 
     # -- internals -----------------------------------------------------------
+    def _dispatch_cache(self, cache: Any = None) -> Any:
+        """The cache tree a dispatch consumes.
+
+        For the paged layout the ``pages`` leaf is refreshed from a
+        COPY of the host page table (the allocator is
+        host-authoritative: admission and release mutate
+        ``self._pager.table`` in place between dispatches, and
+        ``jnp.asarray`` can zero-copy-alias a host numpy buffer on CPU
+        — an aliased view would let the next admission rewrite the page
+        mapping under a still-pending dispatch); the dense layout
+        passes the persistent cache straight through.
+        """
+        cache = self._cache if cache is None else cache
+        if not self._paged:
+            return cache
+        return {**cache, "pages": jnp.asarray(np.array(self._pager.table))}
+
     def _spec_round(self, live: dict[int, Request]) -> None:
         """One speculative draft/verify round (DESIGN.md §10).
 
@@ -1075,11 +1398,17 @@ class ServeEngine:
         t0 = time.perf_counter()
         if self.spec_draft == "model":
             run, self._draft_cache = self._draft_run(
-                self.draft_params, self._tok_dev, self._draft_cache, pos, width
+                self.draft_params,
+                self._tok_dev,
+                self._dispatch_cache(self._draft_cache),
+                pos,
+                width,
             )
         else:
             run = jnp.asarray(self._ngram_run(live, width))
-        vtok, acc, ptok, self._cache = self._verify(self.params, run, self._cache, pos)
+        vtok, acc, ptok, self._cache = self._verify(
+            self.params, run, self._dispatch_cache(), pos
+        )
         if self.spec_draft == "model":
             self._tok_dev = ptok
         # dispatch-clocked like the plain path: one record per round
@@ -1179,6 +1508,8 @@ class ServeEngine:
             self._sched.finish(slot)
             self._completed += 1
             self._pos[slot] = 0
+            if self._paged:
+                self._pager.release(slot)
             req.t_finish = time.perf_counter()
             self._m_request.record(req.t_finish - req.t_submit)
             self._m_finished.inc()

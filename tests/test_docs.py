@@ -1,0 +1,68 @@
+"""Docs consistency (scripts/docs_check.py; CI `docs-check` job).
+
+Tier-1 coverage of the §-reference grep so the check's own logic
+cannot rot: the parsing primitives on synthetic text, and the live
+repo sweep (every `DESIGN.md §N` reference in docs + sources must
+resolve to a real `## §N` header)."""
+import importlib.util
+import os
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+spec = importlib.util.spec_from_file_location(
+    "docs_check", os.path.join(REPO, "scripts", "docs_check.py")
+)
+docs_check = importlib.util.module_from_spec(spec)
+spec.loader.exec_module(docs_check)
+
+
+def test_section_numbers_parses_headers_only():
+    text = (
+        "## §1 Overview\n"
+        "body mentioning §9 inline\n"
+        "## §12 Paged cache\n"
+        "### §99 not a top-level header\n"
+        "##§3 missing space\n"
+    )
+    assert docs_check.section_numbers(text) == {1, 12}
+
+
+def test_referenced_sections_handles_comma_lists():
+    text = (
+        "see DESIGN.md §9 and (DESIGN.md §9, §12); also DESIGN.md  §7\n"
+        "bare §5 without the file name does not count\n"
+        "neither does EXPERIMENTS.md §4\n"
+    )
+    assert docs_check.referenced_sections(text) == {7, 9, 12}
+
+
+def test_check_refs_clean_on_this_repo():
+    errors = docs_check.check_refs()
+    assert errors == [], "\n".join(errors)
+
+
+def test_dangling_reference_is_detected(tmp_path, monkeypatch):
+    (tmp_path / "DESIGN.md").write_text("## §1 Only section\n")
+    # assembled so this test file's own source stays clean under the sweep
+    (tmp_path / "README.md").write_text("points at DESIGN.md " + "§42\n")
+    src = tmp_path / "src"
+    src.mkdir()
+    (src / "mod.py").write_text('"""ok: DESIGN.md §1"""\n')
+    monkeypatch.setattr(docs_check, "REPO", str(tmp_path))
+    errors = docs_check.check_refs()
+    assert len(errors) == 1 and "§42" in errors[0] and "README.md" in errors[0]
+
+
+def test_design_has_paged_cache_section():
+    with open(os.path.join(REPO, "DESIGN.md")) as f:
+        assert 12 in docs_check.section_numbers(f.read())
+
+
+def test_readme_paged_snippet_present_and_compiles():
+    """examples-smoke EXECUTES the snippet; tier-1 just pins that it
+    exists and parses, so a README edit cannot silently drop it."""
+    with open(os.path.join(REPO, "README.md")) as f:
+        blocks = docs_check.readme_snippets(f.read())
+    assert len(blocks) == 1
+    compile(blocks[0], "<readme>", "exec")
+    assert "calibrate_kv_cache" in blocks[0] and "cache_stats" in blocks[0]

@@ -312,7 +312,11 @@ CFG = ArchConfig(
 STATS_KEYS = {
     "n_slots", "live_slots", "steps", "decode_steps", "prefills",
     "tokens_generated", "requests_completed", "requests_truncated",
-    "mesh", "straggler", "energy_nj_per_token",
+    "mesh", "straggler", "energy_nj_per_token", "cache",
+}
+CACHE_KEYS = {
+    "layout", "kv_bits", "page_size", "pages_total", "pages_used",
+    "pages_shared", "prefix_hits", "bytes_per_token", "slot_bytes",
 }
 LATENCY_KEYS = {
     "ttft_p50_s", "ttft_p99_s", "itl_p50_s", "itl_p99_s",
@@ -355,6 +359,8 @@ def test_engine_metrics_and_frozen_stats(params):
     assert set(st) == STATS_KEYS | {"latency"}
     assert set(st["latency"]) == LATENCY_KEYS
     assert set(st["straggler"]) == STRAGGLER_KEYS
+    assert set(st["cache"]) == CACHE_KEYS
+    assert st["cache"]["layout"] == "dense" and st["cache"]["page_size"] == 0
 
     total_tokens = sum(n for _, n in reqs)
     h = reg.histograms()
@@ -392,6 +398,7 @@ def test_engine_disabled_registry_identical_output(params):
     # disabled engine reports no latency block, no registered instruments
     st = plain.stats()
     assert "latency" not in st and set(st) == STATS_KEYS
+    assert set(st["cache"]) == CACHE_KEYS
     assert st["energy_nj_per_token"] > 0
 
 
@@ -405,12 +412,44 @@ def test_speculative_engine_metrics_and_frozen_stats(params):
     assert set(st) == STATS_KEYS | {"latency", "speculative"}
     assert set(st["speculative"]) == SPECULATIVE_KEYS
     assert set(st["latency"]) == LATENCY_KEYS
+    assert set(st["cache"]) == CACHE_KEYS
 
     h = reg.histograms()
     assert h["serve.spec.round_width"].count == st["speculative"]["rounds"]
     assert h["serve.spec.accepted_per_round"].count > 0
     assert h["serve.ttft_s"].count == len(reqs)
     assert reg.counters()["serve.tokens_total"].value == st["tokens_generated"]
+    export.validate_snapshot(export.snapshot(reg))
+
+
+def test_paged_engine_cache_stats_and_gauges(params):
+    rng = np.random.default_rng(7)
+    prefix = rng.integers(0, CFG.vocab, 16).astype(np.int32)
+    reqs = [
+        (np.concatenate([prefix, rng.integers(0, CFG.vocab, 4 + i)]).astype(np.int32), 5)
+        for i in range(4)
+    ]
+    reg = Registry(enabled=True)
+    eng = ServeEngine(CFG, params, n_slots=2, max_len=48, mesh=None,
+                      kv_cache="paged", page_size=8, metrics=reg)
+    eng.serve(reqs)
+    st = eng.stats()
+    assert set(st) == STATS_KEYS | {"latency"}
+    cache = st["cache"]
+    assert set(cache) == CACHE_KEYS
+    assert cache["layout"] == "paged" and cache["page_size"] == 8
+    # the 16-token shared prefix is 2 full pages; admissions overlapping
+    # a live sharer acquire them instead of re-prefilling (once the last
+    # reader finishes the pages are freed AND de-indexed, so a gap in
+    # occupancy re-registers rather than hits — hence >=, not ==)
+    assert cache["prefix_hits"] >= 4
+    assert cache["pages_used"] == 0  # drained engine holds no pages
+    # prefix sharing means a slot holds fewer private bytes than the
+    # dense per-slot stripe (== bytes_per_token at float width)
+    assert cache["slot_bytes"] < cache["bytes_per_token"]
+    g = reg.gauges()
+    assert "serve.cache.pages_used" in g and "serve.cache.pages_shared" in g
+    assert reg.counters()["serve.cache.prefix_hits_total"].value == cache["prefix_hits"]
     export.validate_snapshot(export.snapshot(reg))
 
 

@@ -1,0 +1,326 @@
+"""Paged quantized KV cache (DESIGN.md §12).
+
+Three layers of coverage:
+
+  * :class:`repro.serve.paging.PageTable` host allocator semantics —
+    refcounting under alloc/share/free, eviction, slot reuse,
+    de-indexing on free, exhaustion;
+  * quantized-cache fidelity — per-head dequantization MSE bounded by
+    the calibrated scales, and token identity of the paged int8 engine
+    against the dense static-int8 reference at the serving bit-width;
+  * engine token parity — paged float/int8, speculative drafters and
+    flash decode, single-device and a fake 4-device mesh (subprocess:
+    jax pins the device count at first backend init).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.serve.paging import PageTable
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------------------
+# PageTable allocator (no jax needed)
+# ---------------------------------------------------------------------------
+def test_admit_allocates_all_pages_privately():
+    pt = PageTable(n_slots=2, max_len=32, page_size=8, n_pages=12)
+    assert pt.pmax == 4 and pt.pages_total == 10
+    shared = pt.admit(0, np.arange(20, dtype=np.int32))
+    assert shared == 0  # nothing indexed yet
+    # all Pmax pages allocated up front (speculative verify runs may
+    # write past the current position, so the row must own its tail)
+    assert pt.pages_used == 4
+    row = pt.table[0]
+    assert len(set(row.tolist())) == 4 and pt.scratch[0] not in row
+
+
+def test_prefix_sharing_refcounts_and_release():
+    pt = PageTable(n_slots=3, max_len=32, page_size=8, n_pages=16)
+    prompt = np.arange(20, dtype=np.int32)  # 2 full pages + 4 tokens
+    pt.admit(0, prompt)
+    pt.register(0, prompt)
+    shared = pt.admit(1, prompt.copy())
+    assert shared == 16  # both full pages matched
+    assert pt.prefix_hits == 2
+    assert (pt.table[0][:2] == pt.table[1][:2]).all()
+    assert pt.pages_shared == 2
+    # suffix pages are private
+    assert set(pt.table[0][2:]).isdisjoint(set(pt.table[1][2:]))
+    # first reader leaves: pages stay (slot 1 still reads them)
+    pt.release(0)
+    assert pt.pages_shared == 0 and pt.pages_used == 4
+    # last reader leaves: pages freed AND de-indexed
+    pt.release(1)
+    assert pt.pages_used == 0
+    assert pt.admit(2, prompt.copy()) == 0  # index is empty again
+
+
+def test_partial_prefix_match_and_suffix_guarantee():
+    pt = PageTable(n_slots=2, max_len=32, page_size=8, n_pages=16)
+    a = np.arange(24, dtype=np.int32)
+    pt.admit(0, a)
+    pt.register(0, a)
+    # a prompt that is EXACTLY the indexed pages still prefills a
+    # suffix: at most (S-1)//page pages are shared
+    assert pt.admit(1, a.copy()) == 16
+    pt.release(1)
+    # diverging second page: only the first page chain matches
+    b = np.concatenate([a[:8], a[8:16] + 1, a[16:]])
+    assert pt.admit(1, b) == 8
+    assert pt.prefix_hits == 3
+
+
+def test_release_parks_row_on_scratch_and_slot_reuse():
+    pt = PageTable(n_slots=2, max_len=16, page_size=8, n_pages=8)
+    p1 = np.arange(10, dtype=np.int32)
+    pt.admit(0, p1)
+    pt.register(0, p1)
+    pt.release(0)
+    assert (pt.table[0] == pt.scratch[0]).all()
+    # reused slot gets fresh pages; refcounts balance
+    p2 = np.arange(100, 112, dtype=np.int32)
+    pt.admit(0, p2)
+    assert pt.pages_used == 2
+    pt.release(0)
+    assert pt.pages_used == 0 and (pt.refs >= 0).all()
+
+
+def test_pool_exhaustion_raises():
+    pt = PageTable(n_slots=2, max_len=32, page_size=8, n_pages=7)  # 5 usable < 2*4
+    pt.admit(0, np.arange(20, dtype=np.int32))
+    with pytest.raises(RuntimeError, match="exhausted"):
+        pt.admit(1, np.arange(100, 120, dtype=np.int32))
+
+
+def test_undersized_pool_rejected():
+    with pytest.raises(ValueError, match="n_pages"):
+        PageTable(n_slots=2, max_len=32, page_size=8, n_pages=5)
+
+
+def test_allocation_is_deterministic():
+    def run():
+        pt = PageTable(n_slots=2, max_len=32, page_size=8, n_pages=16)
+        pt.admit(0, np.arange(20, dtype=np.int32))
+        pt.admit(1, np.arange(50, 70, dtype=np.int32))
+        pt.release(0)
+        pt.admit(0, np.arange(9, dtype=np.int32))
+        return pt.table.copy()
+
+    np.testing.assert_array_equal(run(), run())
+
+
+# ---------------------------------------------------------------------------
+# Quantized-cache fidelity + engine parity (jax)
+# ---------------------------------------------------------------------------
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs.base import ArchConfig  # noqa: E402
+from repro.models import get_model  # noqa: E402
+from repro.serve import ServeEngine, ServeSetup, static_generate  # noqa: E402
+
+CFG = ArchConfig(
+    name="paging-t", family="dense", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=2, d_ff=128, vocab=128, head_dim=16, dtype_str="float32",
+)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return get_model(CFG).init_params(CFG, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def kv_scales(params):
+    from repro.calib import calibrate_kv_cache
+
+    batches = jax.random.randint(jax.random.PRNGKey(7), (3, 2, 32), 0, CFG.vocab)
+    return calibrate_kv_cache(params, CFG, batches)
+
+
+def _shared_prefix_reqs(n, seed=0, prefix_len=16, max_new=8):
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, CFG.vocab, prefix_len)
+    return [
+        (
+            np.concatenate([prefix, rng.integers(0, CFG.vocab, 4 + i)]).astype(np.int32),
+            max_new,
+        )
+        for i in range(n)
+    ]
+
+
+def test_kv_quantization_mse_bounded_per_head(params, kv_scales):
+    """Round-trip error of the static int8 quantizer is bounded per
+    (layer, head) by the calibrated scale: amax-derived scales never
+    clip, so |dq(q(x)) - x| <= scale/2 elementwise on calibration-range
+    data and the per-head MSE is <= (scale/2)^2."""
+    from repro.models import transformer
+
+    k_scale, v_scale = kv_scales
+    toks_ = jax.random.randint(jax.random.PRNGKey(7), (1, 2, 32), 0, CFG.vocab)
+
+    from repro.calib import TapCollector
+
+    tc = TapCollector()
+    transformer.forward(params, CFG, toks_[0], tap=tc, tap_kv=True)
+    for name, scale in (("k_cache", k_scale), ("v_cache", v_scale)):
+        x = np.asarray(tc.acts[name], np.float32)  # [L, B, S, KV, hd]
+        sf = scale[:, None, None, :, None]
+        q = np.clip(np.round(x / sf), -127, 127)
+        err = q * sf - x
+        mse = (err ** 2).mean(axis=(1, 2, 4))  # [L, KV]
+        assert (np.abs(err) <= sf / 2 + 1e-6).all()
+        assert (mse <= (scale / 2) ** 2 + 1e-12).all()
+
+
+def test_paged_float_engine_token_parity(params):
+    reqs = _shared_prefix_reqs(6)
+    ref = ServeEngine(CFG, params, n_slots=3, max_len=64, mesh=None).serve(reqs)
+    eng = ServeEngine(CFG, params, n_slots=3, max_len=64, mesh=None,
+                      kv_cache="paged", page_size=8)
+    out = eng.serve(reqs)
+    for a, b in zip(ref, out):
+        np.testing.assert_array_equal(a, b)
+    st = eng.cache_stats()
+    assert st["prefix_hits"] > 0 and st["pages_used"] == 0
+
+
+def test_paged_int8_token_identity_vs_dense_static(params, kv_scales):
+    """Token identity at the serving bit-width: the paged int8 engine
+    must emit exactly what the dense static-int8 reference emits —
+    same codes, same scales, paging changes addressing only."""
+    reqs = _shared_prefix_reqs(5, seed=3)
+    eng = ServeEngine(CFG, params, n_slots=2, max_len=64, mesh=None,
+                      kv_cache="paged", page_size=8, kv_scales=kv_scales)
+    out = eng.serve(reqs)
+    setup = ServeSetup(cfg=CFG, mesh=None, max_len=64, batch=1, moe_impl="dense")
+    scales = (jnp.asarray(kv_scales[0]), jnp.asarray(kv_scales[1]))
+    for (prompt, n), got in zip(reqs, out):
+        ref = static_generate(
+            setup, params, {"tokens": jnp.asarray(prompt[None])}, n, kv_scales=scales
+        )
+        np.testing.assert_array_equal(np.asarray(ref)[0], got)
+
+
+def test_paged_engine_speculative_and_flash_parity(params):
+    reqs = _shared_prefix_reqs(5, seed=5, max_new=10)
+    ref = ServeEngine(CFG, params, n_slots=2, max_len=64, mesh=None).serve(reqs)
+    for kwargs in (
+        dict(spec_k=4, spec_draft="ngram"),
+        dict(spec_k=3, spec_draft="model", draft_params=params),
+        dict(flash_decode=True),
+    ):
+        eng = ServeEngine(CFG, params, n_slots=2, max_len=64, mesh=None,
+                          kv_cache="paged", page_size=8, **kwargs)
+        out = eng.serve(reqs)
+        for a, b in zip(ref, out):
+            np.testing.assert_array_equal(a, b)
+
+
+def test_paged_eviction_frees_pages_and_reuses_slot(params):
+    eng = ServeEngine(CFG, params, n_slots=1, max_len=64, mesh=None,
+                      kv_cache="paged", page_size=8)
+    rng = np.random.default_rng(11)
+    r1 = eng.submit(rng.integers(0, CFG.vocab, 20).astype(np.int32), 30)
+    eng.step()
+    assert eng.cache_stats()["pages_used"] == eng._pager.pmax
+    eng.evict(r1)
+    assert eng.cache_stats()["pages_used"] == 0
+    # the freed slot serves the next request with correct output
+    prompt = rng.integers(0, CFG.vocab, 12).astype(np.int32)
+    r2 = eng.submit(prompt, 6)
+    eng.run()
+    ref = ServeEngine(CFG, params, n_slots=1, max_len=64, mesh=None).serve([(prompt, 6)])
+    np.testing.assert_array_equal(eng.result(r2), ref[0])
+
+
+def test_dispatch_pages_snapshot_not_aliased(params):
+    """The pages leaf handed to a dispatch must be a COPY of the host
+    page table: jnp.asarray can zero-copy-alias a numpy host buffer on
+    CPU, and the allocator mutates the table in place on the next
+    admit/release while the async dispatch may not have read its view
+    yet — an aliased view let a slot-reuse admission rewrite the page
+    mapping under a pending decode (caught as token divergence in the
+    serve_continuous bench)."""
+    eng = ServeEngine(CFG, params, n_slots=2, max_len=64, mesh=None,
+                      kv_cache="paged", page_size=8)
+    r = eng.submit(np.arange(12, dtype=np.int32), 4)
+    eng.step()
+    pages = eng._dispatch_cache()["pages"]
+    before = np.asarray(pages).copy()
+    eng._pager.table[:] = -1  # what the next admit/release would do
+    np.testing.assert_array_equal(np.asarray(pages), before)
+    eng._pager.table[:] = before
+    eng.run()
+    assert len(eng.result(r)) == 4
+
+
+def test_engine_validation_errors(params):
+    with pytest.raises(ValueError, match="paged"):
+        ServeEngine(CFG, params, mesh=None, kv_bits=8)
+    with pytest.raises(ValueError, match="kv_scales"):
+        ServeEngine(CFG, params, mesh=None, kv_cache="paged", kv_bits=8)
+    with pytest.raises(ValueError, match="int8"):
+        ServeEngine(CFG, params, mesh=None, kv_cache="paged", kv_bits=4,
+                    kv_scales=(np.ones((2, 2)), np.ones((2, 2))))
+    with pytest.raises(ValueError, match="kv_cache"):
+        ServeEngine(CFG, params, mesh=None, kv_cache="chunked")
+
+
+# ---------------------------------------------------------------------------
+# Multi-device: fake 4-device CPU mesh (subprocess; jax pins the device
+# count at first backend init, so it cannot be changed in-process)
+# ---------------------------------------------------------------------------
+def run_in_subprocess(body: str) -> str:
+    script = (
+        "import os\n"
+        'os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"\n'
+        + textwrap.dedent(body)
+    )
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run(
+        [sys.executable, "-c", script],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=560,
+        cwd=REPO,
+    )
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr[-3000:]}"
+    return out.stdout
+
+
+def test_multi_device_paged_engine_parity():
+    run_in_subprocess(
+        """
+        import numpy as np, jax
+        from repro.configs.base import ArchConfig
+        from repro.models import get_model
+        from repro.serve import ServeEngine
+
+        cfg = ArchConfig(name="paging-t", family="dense", n_layers=2, d_model=64,
+                         n_heads=4, n_kv_heads=2, d_ff=128, vocab=128,
+                         head_dim=16, dtype_str="float32")
+        params = get_model(cfg).init_params(cfg, jax.random.PRNGKey(0))
+        rng = np.random.default_rng(0)
+        prefix = rng.integers(0, 128, 16)
+        reqs = [(np.concatenate([prefix, rng.integers(0, 128, 4 + i)]).astype(np.int32), 8)
+                for i in range(4)]
+        ref = ServeEngine(cfg, params, n_slots=2, max_len=64, mesh=None).serve(reqs)
+        for flash in (False, True):
+            eng = ServeEngine(cfg, params, n_slots=2, max_len=64, mesh="auto",
+                              kv_cache="paged", page_size=8, flash_decode=flash)
+            assert eng.mesh is not None and len(jax.devices()) == 4
+            out = eng.serve(reqs)
+            for a, b in zip(ref, out):
+                np.testing.assert_array_equal(a, b)
+        print("OK")
+        """
+    )
