@@ -3,9 +3,9 @@
 
 DESIGN.md is the repo's architecture contract and everything —
 docstrings, comments, README, tests — cross-references it by section
-number (`DESIGN.md §9`). Renumbering or dropping a section silently
-strands every reference, so CI greps them all against the actual
-`## §N` headers:
+number (`DESIGN.md §9`). Since PR 9 the §-reference grep lives in
+`repro.analysis` as rule R007 (DESIGN.md §13); this script is the thin
+wrapper keeping the CI job's entry point and output format stable:
 
     python scripts/docs_check.py refs
 
@@ -14,8 +14,9 @@ The README's paged-KV serving snippet is executable documentation;
 
     python scripts/docs_check.py snippet
 
-`refs` is pure text processing (no jax import — it runs in the lint
-image); `snippet` needs the repro package on PYTHONPATH.
+`refs` imports only `repro.analysis` (which imports neither jax nor
+numpy — it runs in the lint image); `snippet` needs the full repro
+package on PYTHONPATH.
 """
 from __future__ import annotations
 
@@ -24,55 +25,50 @@ import re
 import sys
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_SRC = os.path.join(REPO, "src")
 
-# The §-reference idiom this validates is the explicit `DESIGN.md §N`
-# form (optionally a comma list: `DESIGN.md §9, §12`). Bare `§Perf` /
-# `§Roofline` shorthands in old comments are historical prose, not
-# section pointers, and are deliberately out of scope.
-_REF = re.compile(r"DESIGN\.md\s+(§\d+(?:\s*,\s*§\d+)*)")
-_HDR = re.compile(r"^## §(\d+)\s", re.M)
 
-SCAN_DIRS = ("src", "tests", "scripts", "examples", "benchmarks")
-SCAN_FILES = ("README.md", "ROADMAP.md", "DESIGN.md", "CHANGES.md", "PAPER.md")
-SCAN_EXT = (".py", ".md", ".sh", ".yml")
+def _analysis():
+    """The `repro.analysis` package, importable without PYTHONPATH=src."""
+    try:
+        import repro.analysis
+    except ImportError:
+        sys.path.insert(0, _SRC)
+        import repro.analysis
+    return repro.analysis
 
 
 def section_numbers(design_text: str) -> set[int]:
     """Section numbers with an actual `## §N ` header in DESIGN.md."""
-    return {int(n) for n in _HDR.findall(design_text)}
+    _analysis()
+    from repro.analysis.engine import DESIGN_HDR
+
+    return {int(n) for n in DESIGN_HDR.findall(design_text)}
 
 
 def referenced_sections(text: str) -> set[int]:
     """Every §N pointed at through a `DESIGN.md §N[, §M...]` reference."""
+    _analysis()
+    from repro.analysis.rules import SectionRefRule
+
     out: set[int] = set()
-    for group in _REF.findall(text):
+    for group in SectionRefRule._REF.findall(text):
         out.update(int(n) for n in re.findall(r"§(\d+)", group))
     return out
 
 
-def _scan_paths() -> list[str]:
-    paths = [os.path.join(REPO, f) for f in SCAN_FILES]
-    for d in SCAN_DIRS:
-        for root, dirs, files in os.walk(os.path.join(REPO, d)):
-            dirs[:] = [x for x in dirs if x != "__pycache__"]
-            paths += [
-                os.path.join(root, f) for f in files if f.endswith(SCAN_EXT)
-            ]
-    return [p for p in paths if os.path.exists(p)]
-
-
 def check_refs() -> list[str]:
-    """`path: DESIGN.md §N does not exist` lines; empty means clean."""
-    with open(os.path.join(REPO, "DESIGN.md")) as f:
-        have = section_numbers(f.read())
-    errors = []
-    for path in _scan_paths():
-        with open(path, errors="replace") as f:
-            text = f.read()
-        for n in sorted(referenced_sections(text) - have):
-            rel = os.path.relpath(path, REPO)
-            errors.append(f"{rel}: references DESIGN.md §{n}, which has no header")
-    return errors
+    """`path: references DESIGN.md §N ...` lines; empty means clean.
+
+    Delegates to rule R007 of ``python -m repro.analysis`` (same
+    regexes, same sweep) so this job and the `analysis` job can never
+    disagree about what a dangling reference is.
+    """
+    analysis = _analysis()
+    ctx = analysis.AnalysisContext(root=REPO)
+    rule = analysis.RULES["R007"]
+    findings = analysis.analyze_paths(analysis.default_paths(REPO), ctx, [rule])
+    return [f"{f.path}: {f.message}" for f in findings if f.rule == "R007"]
 
 
 def readme_snippets(readme_text: str, needle: str = "kv_cache") -> list[str]:

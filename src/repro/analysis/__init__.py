@@ -1,0 +1,76 @@
+"""JAX-aware static analysis for this repo (DESIGN.md §13).
+
+An AST + text lint engine that mechanically enforces the invariants
+DESIGN.md states in prose — the bug classes PRs 3/5/8 each fixed by
+hand get a rule here so they cannot regress:
+
+  ========  =======================================================
+  R001      host-aliasing: a mutable host buffer zero-copy-aliased
+            into a jitted dispatch (the PR 5 ``_pos`` / PR 8
+            page-table races)
+  R002      bare ``assert`` in kernels/core/serve hot paths
+            (``python -O`` deletes them; PR 3 swept these once)
+  R003      recompile hazard: jits rebuilt inside loops,
+            data-dependent ``static_argnums``/``static_argnames``
+  R004      host sync inside the serve decode loop (breaks §9's
+            lazy-token pipelining)
+  R005      deprecated entry points called from non-test code
+  R006      pytree aux hygiene: unhashable aux, flatten drifting
+            from ``__init__``
+  R007      ``DESIGN.md §N`` references that resolve to no header
+            (was ``scripts/docs_check.py``)
+  R000      suppression hygiene: a ``repro: noqa[...]`` comment
+            without a reason, or naming an unknown rule
+  ========  =======================================================
+
+The package imports neither jax nor numpy — the CI ``analysis`` and
+``docs-check`` jobs run it in the bare lint image.  CLI::
+
+    python -m repro.analysis [--format=text|json] [--baseline[=PATH]]
+"""
+from repro.analysis.baseline import (
+    BaselineError,
+    compare_to_baseline,
+    load_baseline,
+    make_baseline,
+    validate_baseline,
+)
+from repro.analysis.engine import (
+    DEFAULT_BASELINE,
+    REPO_ROOT,
+    AnalysisContext,
+    Finding,
+    Rule,
+    RULES,
+    analyze_paths,
+    analyze_repo,
+    analyze_source,
+    default_paths,
+    findings_to_json,
+    parse_suppressions,
+    register_rule,
+)
+from repro.analysis import rules as _rules  # registers R001-R007
+
+del _rules
+
+__all__ = [
+    "AnalysisContext",
+    "BaselineError",
+    "DEFAULT_BASELINE",
+    "Finding",
+    "REPO_ROOT",
+    "RULES",
+    "Rule",
+    "analyze_paths",
+    "analyze_repo",
+    "analyze_source",
+    "compare_to_baseline",
+    "default_paths",
+    "findings_to_json",
+    "load_baseline",
+    "make_baseline",
+    "parse_suppressions",
+    "register_rule",
+    "validate_baseline",
+]

@@ -1,0 +1,140 @@
+"""CLI for the static-analysis pass (DESIGN.md §13).
+
+Usage::
+
+    python -m repro.analysis                       # sweep, text report
+    python -m repro.analysis --format=json         # machine-readable
+    python -m repro.analysis --baseline            # gate vs committed baseline
+    python -m repro.analysis --baseline=path.json  # gate vs explicit baseline
+    python -m repro.analysis --update-baseline     # accept current findings
+    python -m repro.analysis --list-rules
+    python -m repro.analysis path1.py path2.md     # explicit files only
+
+Exit codes: 0 clean (or matches baseline), 1 findings (or new/stale vs
+baseline), 2 usage error. Imports neither jax nor numpy — runs in the
+bare lint image.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from repro.analysis.baseline import (
+    BaselineError,
+    compare_to_baseline,
+    load_baseline,
+    make_baseline,
+)
+from repro.analysis.engine import (
+    DEFAULT_BASELINE,
+    REPO_ROOT,
+    RULES,
+    AnalysisContext,
+    analyze_paths,
+    default_paths,
+    findings_to_json,
+)
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="JAX-aware static analysis: repo rules R001-R007",
+    )
+    ap.add_argument("paths", nargs="*", help="explicit files (default: repo sweep)")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument(
+        "--baseline",
+        nargs="?",
+        const=DEFAULT_BASELINE,
+        default=None,
+        metavar="PATH",
+        help=f"gate against an accepted-findings baseline (default {DEFAULT_BASELINE})",
+    )
+    ap.add_argument(
+        "--update-baseline",
+        nargs="?",
+        const=DEFAULT_BASELINE,
+        default=None,
+        metavar="PATH",
+        help="write the current findings as the new baseline and exit 0",
+    )
+    ap.add_argument("--root", default=REPO_ROOT, help=argparse.SUPPRESS)
+    ap.add_argument("--out", default=None, metavar="PATH", help="also write the JSON report here")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rid, rule in sorted(RULES.items()):
+            print(f"{rid}  {rule.title}")
+        return 0
+
+    ctx = AnalysisContext(root=args.root)
+    paths = args.paths or default_paths(args.root)
+    findings = analyze_paths(paths, ctx)
+    report = findings_to_json(findings)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+            f.write("\n")
+
+    if args.update_baseline:
+        doc = make_baseline(findings)
+        path = os.path.join(args.root, args.update_baseline)
+        with open(path, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(
+            f"[analysis] baseline updated: {args.update_baseline} "
+            f"({len(doc['findings'])} accepted fingerprints)"
+        )
+        return 0
+
+    active = [f for f in findings if not f.suppressed]
+    suppressed = [f for f in findings if f.suppressed]
+
+    if args.baseline is not None:
+        bpath = args.baseline
+        if not os.path.isabs(bpath):
+            bpath = os.path.join(args.root, bpath)
+        try:
+            baseline = load_baseline(bpath)
+        except (OSError, BaselineError) as e:
+            print(f"[analysis] baseline unusable: {e}", file=sys.stderr)
+            return 2
+        new, stale = compare_to_baseline(findings, baseline)
+        if args.format == "json":
+            print(json.dumps(report, indent=2, sort_keys=True))
+        else:
+            for f in new:
+                print(f.format(), file=sys.stderr)
+            for e in stale:
+                print(
+                    f"[analysis] stale baseline entry (finding fixed? shrink the "
+                    f"baseline): {e['rule']} {e['path']}: {e['text']!r} x{e['count']}",
+                    file=sys.stderr,
+                )
+        ok = not new and not stale
+        print(
+            f"[analysis] {len(active)} finding(s), {len(suppressed)} suppressed, "
+            f"{len(new)} new vs baseline, {len(stale)} stale baseline entr(ies) "
+            f"-> {'ok' if ok else 'FAIL'}"
+        )
+        return 0 if ok else 1
+
+    if args.format == "json":
+        print(json.dumps(report, indent=2, sort_keys=True))
+    else:
+        for f in findings:
+            print(f.format())
+        print(
+            f"[analysis] {len(paths)} file(s): {len(active)} finding(s), "
+            f"{len(suppressed)} suppressed"
+        )
+    return 1 if active else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

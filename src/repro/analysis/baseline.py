@@ -1,0 +1,121 @@
+"""Schema-versioned findings baseline (DESIGN.md §13).
+
+The baseline is the committed ledger of *accepted* findings — ideally
+empty. CI runs the sweep against it and fails on anything new, so a
+fresh R001 race or bare assert cannot land silently; fixing a finding
+and forgetting to shrink the baseline is also a failure (`--baseline`
+reports stale entries), so the ledger cannot rot upward or downward.
+
+Fingerprints are ``(rule, path, text)`` — the stripped source line,
+not its number — so edits above a known finding do not churn the file.
+Validation is hand-rolled like ``bench/schema.py``: the CI analysis
+job runs in the bare lint image and must never be skippable because a
+validator package is missing.
+"""
+from __future__ import annotations
+
+import json
+from typing import Any
+
+from repro.analysis.engine import Finding
+
+BASELINE_SCHEMA_VERSION = 1
+
+
+class BaselineError(ValueError):
+    """A baseline document does not conform to the schema."""
+
+
+def _expect(cond: bool, path: str, msg: str) -> None:
+    if not cond:
+        raise BaselineError(f"{path}: {msg}")
+
+
+def validate_baseline(doc: Any) -> None:
+    """Raise :class:`BaselineError` unless ``doc`` is a valid baseline."""
+    _expect(isinstance(doc, dict), "$", "document must be an object")
+    _expect(
+        doc.get("schema_version") == BASELINE_SCHEMA_VERSION,
+        "$.schema_version",
+        f"must be {BASELINE_SCHEMA_VERSION}, got {doc.get('schema_version')!r}",
+    )
+    _expect(doc.get("tool") == "repro.analysis", "$.tool", "must be 'repro.analysis'")
+    entries = doc.get("findings")
+    _expect(isinstance(entries, list), "$.findings", "must be a list")
+    seen: set[tuple[str, str, str]] = set()
+    for i, e in enumerate(entries):
+        p = f"$.findings[{i}]"
+        _expect(isinstance(e, dict), p, "entry must be an object")
+        for key in ("rule", "path", "text"):
+            _expect(isinstance(e.get(key), str), f"{p}.{key}", "must be a string")
+        for key in ("rule", "path"):
+            _expect(e[key] != "", f"{p}.{key}", "must be non-empty")
+        _expect(
+            isinstance(e.get("count"), int)
+            and not isinstance(e["count"], bool)
+            and e["count"] >= 1,
+            f"{p}.count",
+            "must be an int >= 1",
+        )
+        extra = set(e) - {"rule", "path", "text", "count"}
+        _expect(not extra, p, f"unknown keys {sorted(extra)}")
+        fp = (e["rule"], e["path"], e["text"])
+        _expect(fp not in seen, p, f"duplicate fingerprint {fp}")
+        seen.add(fp)
+
+
+def make_baseline(findings: list[Finding]) -> dict:
+    """Baseline document accepting exactly ``findings`` (unsuppressed)."""
+    counts: dict[tuple[str, str, str], int] = {}
+    for f in findings:
+        if f.suppressed:
+            continue
+        counts[f.fingerprint()] = counts.get(f.fingerprint(), 0) + 1
+    return {
+        "schema_version": BASELINE_SCHEMA_VERSION,
+        "tool": "repro.analysis",
+        "findings": [
+            {"rule": r, "path": p, "text": t, "count": c}
+            for (r, p, t), c in sorted(counts.items())
+        ],
+    }
+
+
+def load_baseline(path: str) -> dict:
+    """Read + validate a baseline file."""
+    with open(path) as f:
+        try:
+            doc = json.load(f)
+        except json.JSONDecodeError as e:
+            raise BaselineError(f"{path}: not valid JSON: {e}") from e
+    validate_baseline(doc)
+    return doc
+
+
+def compare_to_baseline(
+    findings: list[Finding], baseline: dict
+) -> tuple[list[Finding], list[dict]]:
+    """(new_findings, stale_entries) against an accepted baseline.
+
+    A finding is NEW when its fingerprint occurs more times in the
+    current sweep than the baseline accepts; a baseline entry is STALE
+    when the sweep no longer produces it that many times (fix landed —
+    shrink the baseline so the win is locked in).
+    """
+    budget = {(e["rule"], e["path"], e["text"]): e["count"] for e in baseline["findings"]}
+    remaining = dict(budget)
+    new: list[Finding] = []
+    for f in findings:
+        if f.suppressed:
+            continue
+        fp = f.fingerprint()
+        if remaining.get(fp, 0) > 0:
+            remaining[fp] -= 1
+        else:
+            new.append(f)
+    stale = [
+        {"rule": r, "path": p, "text": t, "count": c}
+        for (r, p, t), c in sorted(remaining.items())
+        if c > 0
+    ]
+    return new, stale

@@ -1,0 +1,348 @@
+"""Core of the repo's static-analysis pass (DESIGN.md §13).
+
+Dependency-free by design (``ast`` + ``re`` + the rule registry): the
+CI ``analysis`` job runs in the bare lint image — no jax, no numpy —
+exactly like the bench/obs schema validators this engine mirrors.
+
+Pieces:
+
+  * :class:`Finding` — one diagnostic, fingerprinted by
+    ``(rule, path, text)`` so baselines survive line drift;
+  * :class:`Rule` — a registered checker. AST rules implement
+    ``check_tree(ctx, relpath, text, tree)``; text rules (R007, which
+    also reads .md/.sh/.yml) implement ``check_text(ctx, relpath,
+    text)``;
+  * suppressions — a ``repro: noqa[R004] <reason>`` comment on the
+    finding's line (or a comment-only line directly above) suppresses
+    that rule there. The reason is mandatory: a bare one, or one naming
+    an unknown rule, is itself a finding (R000) — suppressions are
+    reviewable decisions, not mute buttons;
+  * :func:`analyze_repo` — the default sweep: AST rules over non-test
+    python (``src/repro``, ``scripts``, ``examples``, ``benchmarks``),
+    the text rules additionally over ``tests`` and the root markdown
+    files. ``tests/analysis_corpus`` (deliberate positives) is always
+    excluded from the sweep.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import re
+from typing import Callable, Iterable
+
+REPO_ROOT = os.path.dirname(
+    os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+)
+DEFAULT_BASELINE = os.path.join("src", "repro", "analysis", "baseline.json")
+
+# Directories the default sweep walks for python AST rules (non-test
+# code: tests exercise deprecated wrappers and race shapes on purpose)
+# and for the text rules (the docs_check sweep, DESIGN.md §7 — tests
+# included there: a test docstring can strand a §-reference too).
+PY_SCAN_DIRS = ("src", "scripts", "examples", "benchmarks")
+TEXT_SCAN_DIRS = ("src", "tests", "scripts", "examples", "benchmarks")
+TEXT_SCAN_FILES = ("README.md", "ROADMAP.md", "DESIGN.md", "CHANGES.md", "PAPER.md")
+TEXT_EXT = (".py", ".md", ".sh", ".yml")
+# Deliberate rule-positive fixtures live here; the sweep must never
+# report them (they are inputs to tests/test_analysis.py, not code).
+EXCLUDE_DIRS = ("__pycache__", "analysis_corpus")
+
+# A real `## §N ` DESIGN.md section header (shared with R007 and the
+# scripts/docs_check.py wrapper, so the two can never disagree).
+DESIGN_HDR = re.compile(r"^## §(\d+)\s", re.M)
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One diagnostic.
+
+    ``text`` is the stripped source line — with ``rule`` and ``path``
+    it forms the baseline fingerprint, so renumbering lines above a
+    known finding does not make it "new"."""
+
+    rule: str
+    path: str  # repo-relative, posix separators
+    line: int
+    col: int
+    message: str
+    text: str
+    suppressed: bool = False
+    reason: str = ""
+
+    def fingerprint(self) -> tuple[str, str, str]:
+        return (self.rule, self.path, self.text)
+
+    def format(self) -> str:
+        tag = " (suppressed: {})".format(self.reason) if self.suppressed else ""
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} {self.message}{tag}"
+
+
+class Rule:
+    """A registered checker. Subclasses set ``rule_id``/``title`` and
+    implement ``check_tree`` (python AST) and/or ``check_text``."""
+
+    rule_id: str = ""
+    title: str = ""
+
+    def applies(self, relpath: str) -> bool:
+        """Whether this rule scans ``relpath`` (repo-relative, posix)."""
+        return relpath.endswith(".py")
+
+    def check_tree(
+        self, ctx: "AnalysisContext", relpath: str, text: str, tree: ast.AST
+    ) -> list[tuple[int, int, str]]:
+        return []
+
+    def check_text(
+        self, ctx: "AnalysisContext", relpath: str, text: str
+    ) -> list[tuple[int, int, str]]:
+        return []
+
+
+RULES: dict[str, Rule] = {}
+
+
+def register_rule(cls: type[Rule]) -> type[Rule]:
+    rule = cls()
+    if not re.fullmatch(r"R\d{3}", rule.rule_id):
+        raise ValueError(f"rule_id must match R\\d{{3}}, got {rule.rule_id!r}")
+    if rule.rule_id in RULES:
+        raise ValueError(f"duplicate rule {rule.rule_id}")
+    RULES[rule.rule_id] = rule
+    return cls
+
+
+@dataclasses.dataclass
+class AnalysisContext:
+    """Per-run state rules may consult (repo root, DESIGN.md headers)."""
+
+    root: str = REPO_ROOT
+    _design_sections: set[int] | None = None
+
+    def design_sections(self) -> set[int]:
+        """Section numbers with a real ``## §N`` header in DESIGN.md."""
+        if self._design_sections is None:
+            path = os.path.join(self.root, "DESIGN.md")
+            try:
+                with open(path, errors="replace") as f:
+                    text = f.read()
+            except OSError:
+                text = ""
+            self._design_sections = {int(n) for n in DESIGN_HDR.findall(text)}
+        return self._design_sections
+
+
+# ---------------------------------------------------------------------------
+# Suppressions
+# ---------------------------------------------------------------------------
+_NOQA = re.compile(r"#\s*repro:\s*noqa\[(?P<rules>[A-Za-z0-9,\s]*)\]\s*:?\s*(?P<reason>.*?)\s*$")
+
+
+@dataclasses.dataclass
+class Suppression:
+    line: int  # the physical line the comment sits on
+    rules: tuple[str, ...]
+    reason: str
+
+
+def parse_suppressions(text: str) -> dict[int, Suppression]:
+    """Map *effective* line -> suppression.
+
+    A suppression on a code line covers that line; one on a
+    comment-only line covers the next line (the black-formatted
+    multiline-call case). Returned keys are 1-based line numbers.
+    """
+    out: dict[int, Suppression] = {}
+    for i, raw in enumerate(text.splitlines(), start=1):
+        m = _NOQA.search(raw)
+        if not m:
+            continue
+        rules = tuple(r.strip() for r in m.group("rules").split(",") if r.strip())
+        supp = Suppression(line=i, rules=rules, reason=m.group("reason").strip())
+        if raw.strip().startswith("#"):
+            out[i + 1] = supp
+        out[i] = supp
+    return out
+
+
+def _suppression_findings(relpath: str, text: str, supps: dict[int, Suppression]) -> list[Finding]:
+    """R000: a bare suppression, or one naming an unknown rule."""
+    lines = text.splitlines()
+    out = []
+    seen: set[int] = set()
+    for supp in supps.values():
+        if supp.line in seen:
+            continue
+        seen.add(supp.line)
+        src = lines[supp.line - 1].strip() if supp.line <= len(lines) else ""
+        if not supp.reason:
+            out.append(
+                Finding(
+                    rule="R000",
+                    path=relpath,
+                    line=supp.line,
+                    col=0,
+                    message=(
+                        "suppression without a reason — add one after the "
+                        "bracket: repro: noqa[R00x] <why this is safe>"
+                    ),
+                    text=src,
+                )
+            )
+        for rid in supp.rules:
+            if rid != "R000" and rid not in RULES:
+                out.append(
+                    Finding(
+                        rule="R000",
+                        path=relpath,
+                        line=supp.line,
+                        col=0,
+                        message=f"suppression names unknown rule {rid!r}",
+                        text=src,
+                    )
+                )
+        if not supp.rules:
+            out.append(
+                Finding(
+                    rule="R000",
+                    path=relpath,
+                    line=supp.line,
+                    col=0,
+                    message="suppression with an empty rule list",
+                    text=src,
+                )
+            )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Running
+# ---------------------------------------------------------------------------
+def analyze_source(
+    relpath: str,
+    text: str,
+    ctx: AnalysisContext | None = None,
+    rules: Iterable[Rule] | None = None,
+) -> list[Finding]:
+    """All findings for one file's source text.
+
+    Suppressed findings are returned with ``suppressed=True`` (the CLI
+    reports them but they never fail a run); R000 suppression-hygiene
+    findings cannot themselves be suppressed.
+    """
+    ctx = ctx or AnalysisContext()
+    rules = list(RULES.values()) if rules is None else list(rules)
+    active = [r for r in rules if r.applies(relpath)]
+    raw: list[Finding] = []
+    if relpath.endswith(".py"):
+        try:
+            tree = ast.parse(text)
+        except SyntaxError as e:
+            return [
+                Finding(
+                    rule="R000",
+                    path=relpath,
+                    line=int(e.lineno or 0),
+                    col=int(e.offset or 0),
+                    message=f"file does not parse: {e.msg}",
+                    text="",
+                )
+            ]
+        for rule in active:
+            for line, col, msg in rule.check_tree(ctx, relpath, text, tree):
+                raw.append(_mk(rule.rule_id, relpath, text, line, col, msg))
+    for rule in active:
+        for line, col, msg in rule.check_text(ctx, relpath, text):
+            raw.append(_mk(rule.rule_id, relpath, text, line, col, msg))
+
+    supps = parse_suppressions(text) if relpath.endswith(".py") else {}
+    out: list[Finding] = []
+    seen: set[tuple[str, int]] = set()  # dedupe per (rule, line)
+    for f in sorted(raw, key=lambda f: (f.line, f.rule, f.col)):
+        if (f.rule, f.line) in seen:
+            continue
+        seen.add((f.rule, f.line))
+        supp = supps.get(f.line)
+        if supp is not None and f.rule in supp.rules and supp.reason:
+            f = dataclasses.replace(f, suppressed=True, reason=supp.reason)
+        out.append(f)
+    out.extend(_suppression_findings(relpath, text, supps))
+    out.sort(key=lambda f: (f.path, f.line, f.rule, f.col))
+    return out
+
+
+def _mk(rule_id: str, relpath: str, text: str, line: int, col: int, msg: str) -> Finding:
+    lines = text.splitlines()
+    src = lines[line - 1].strip() if 0 < line <= len(lines) else ""
+    return Finding(rule=rule_id, path=relpath, line=line, col=col, message=msg, text=src)
+
+
+def analyze_paths(
+    paths: Iterable[str],
+    ctx: AnalysisContext | None = None,
+    rules: Iterable[Rule] | None = None,
+) -> list[Finding]:
+    """Analyze explicit files (absolute or repo-relative paths)."""
+    ctx = ctx or AnalysisContext()
+    out: list[Finding] = []
+    for path in paths:
+        full = path if os.path.isabs(path) else os.path.join(ctx.root, path)
+        rel = os.path.relpath(full, ctx.root).replace(os.sep, "/")
+        with open(full, errors="replace") as f:
+            text = f.read()
+        out.extend(analyze_source(rel, text, ctx, rules))
+    return out
+
+
+def default_paths(root: str = REPO_ROOT) -> list[str]:
+    """The standard sweep's file set (repo-relative, sorted)."""
+    found: set[str] = set()
+    for name in TEXT_SCAN_FILES:
+        if os.path.exists(os.path.join(root, name)):
+            found.add(name)
+    for d in TEXT_SCAN_DIRS:
+        top = os.path.join(root, d)
+        for dirpath, dirnames, filenames in os.walk(top):
+            dirnames[:] = [x for x in dirnames if x not in EXCLUDE_DIRS]
+            for fn in filenames:
+                if fn.endswith(TEXT_EXT):
+                    rel = os.path.relpath(os.path.join(dirpath, fn), root)
+                    found.add(rel.replace(os.sep, "/"))
+    return sorted(found)
+
+
+def analyze_repo(root: str = REPO_ROOT, rules: Iterable[Rule] | None = None) -> list[Finding]:
+    """The default whole-repo sweep (what CI runs)."""
+    ctx = AnalysisContext(root=root)
+    return analyze_paths(default_paths(root), ctx, rules)
+
+
+REPORT_SCHEMA_VERSION = 1
+
+
+def findings_to_json(findings: list[Finding]) -> dict:
+    """The ``--format=json`` report document (validated by tests)."""
+    counts: dict[str, int] = {}
+    for f in findings:
+        if not f.suppressed:
+            counts[f.rule] = counts.get(f.rule, 0) + 1
+    return {
+        "schema_version": REPORT_SCHEMA_VERSION,
+        "tool": "repro.analysis",
+        "findings": [dataclasses.asdict(f) for f in findings],
+        "counts": dict(sorted(counts.items())),
+        "total": sum(counts.values()),
+        "suppressed": sum(1 for f in findings if f.suppressed),
+    }
+
+
+def is_scanned_python(relpath: str) -> bool:
+    """Non-test python the AST rules sweep by default."""
+    if not relpath.endswith(".py"):
+        return False
+    top = relpath.split("/", 1)[0]
+    return top in PY_SCAN_DIRS
+
+
+ScopeFn = Callable[[str], bool]

@@ -1,0 +1,558 @@
+"""The repo-specific rules (R001–R007; DESIGN.md §13).
+
+Each rule encodes one invariant DESIGN.md states in prose and one PR
+fixed by hand; the positive/negative fixtures live under
+``tests/analysis_corpus/`` and include the verbatim pre-fix shapes of
+the PR 5 ``_pos`` race and the PR 8 page-table race.
+"""
+from __future__ import annotations
+
+import ast
+import re
+
+from repro.analysis.engine import Rule, is_scanned_python, register_rule
+
+
+def _attr_chain(node: ast.AST) -> list[str] | None:
+    """``a.b.c`` -> ["a", "b", "c"]; None if not a pure name chain."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return parts[::-1]
+    return None
+
+
+def _import_aliases(tree: ast.AST) -> set[str]:
+    """Top-level names bound by imports (module aliases, imported names)."""
+    out: set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                out.add(a.asname or a.name.split(".")[0])
+        elif isinstance(node, ast.ImportFrom):
+            for a in node.names:
+                out.add(a.asname or a.name)
+    return out
+
+
+def _peel_subscripts(node: ast.AST) -> ast.AST:
+    while isinstance(node, ast.Subscript):
+        node = node.value
+    return node
+
+
+def _at(node: ast.AST, msg: str) -> tuple[int, int, str]:
+    return (node.lineno, node.col_offset, msg)
+
+
+# ---------------------------------------------------------------------------
+# R001 — host-aliasing into a jitted dispatch
+# ---------------------------------------------------------------------------
+@register_rule
+class HostAliasingRule(Rule):
+    """``jnp.asarray(self._buf)`` zero-copy-aliases a host numpy buffer
+    on CPU; if the attribute is later mutated in place while an async
+    dispatch still holds the view, the dispatch reads torn state — the
+    PR 5 ``_pos`` race and the PR 8 page-table race, both shipped and
+    both fixed by inserting an explicit copy. The blessed crossings are
+    ``np.array(...)`` / ``np.copy(...)`` / ``np.ascontiguousarray(...)``
+    wrappers and the named ``.copy()`` / ``.snapshot()`` /
+    ``.to_device()`` boundary methods (DESIGN.md §13)."""
+
+    rule_id = "R001"
+    title = "host buffer aliased into a device dispatch without a copy"
+
+    _CTORS = (
+        ("jnp", "asarray"),
+        ("jnp", "array"),
+        ("jax", "numpy", "asarray"),
+        ("jax", "numpy", "array"),
+    )
+    _MSG_COPY_FALSE = (
+        "jnp.array(..., copy=False) aliases the host buffer by request — "
+        "an in-place mutation under a pending async dispatch reads torn "
+        "state; drop copy=False or route through a .snapshot()/.to_device() "
+        "boundary"
+    )
+
+    def applies(self, relpath: str) -> bool:
+        return is_scanned_python(relpath)
+
+    def check_tree(self, ctx, relpath, text, tree):
+        aliases = _import_aliases(tree)
+        out = []
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            chain = _attr_chain(node.func)
+            if chain is None or tuple(chain) not in self._CTORS:
+                continue
+            is_array = chain[-1] == "array"
+            copy_false = any(
+                kw.arg == "copy"
+                and isinstance(kw.value, ast.Constant)
+                and kw.value.value is False
+                for kw in node.keywords
+            )
+            if is_array and copy_false:
+                out.append(_at(node, self._MSG_COPY_FALSE))
+                continue
+            if is_array or not node.args:
+                continue  # plain jnp.array copies; nothing to alias
+            core = _peel_subscripts(node.args[0])
+            if not isinstance(core, ast.Attribute):
+                continue  # names/calls/literals: fresh or untrackable
+            root = _attr_chain(core)
+            if root is None or root[0] in aliases:
+                continue  # module constant (np.pi), not a host buffer
+            if isinstance(core.value, ast.Call):
+                continue  # method result, e.g. self.fmt.levels()
+            msg = (
+                f"jnp.asarray({'.'.join(root)}) can zero-copy-alias this "
+                "mutable host attribute on CPU; an in-place mutation before "
+                "the async dispatch reads it is a race (the PR 5 _pos / PR 8 "
+                "page-table bug). Copy at the boundary: np.array(...), "
+                ".copy(), or the owner's .snapshot()/.to_device()"
+            )
+            out.append(_at(node, msg))
+        # the protective wrappers make the crossing explicit; a call
+        # WRAPPING one of them never flags because the arg core is a Call
+        return out
+
+
+# ---------------------------------------------------------------------------
+# R002 — bare assert in hot paths
+# ---------------------------------------------------------------------------
+@register_rule
+class BareAssertRule(Rule):
+    """``python -O`` deletes ``assert`` statements wholesale — a shape
+    guard in a kernel or the serve engine silently vanishes and the
+    next failure is a wrong answer, not an error. PR 3 swept these out
+    of ``elp_bsd_matmul`` once; this keeps them out of every hot path
+    (raise ``ValueError`` with the offending shapes instead)."""
+
+    rule_id = "R002"
+    title = "bare assert in a kernels/core/serve hot path"
+
+    _SCOPES = ("src/repro/kernels/", "src/repro/core/", "src/repro/serve/")
+    _MSG = (
+        "bare assert is deleted under python -O — raise ValueError(...) "
+        "with the offending shapes instead (PR 3 contract)"
+    )
+
+    def applies(self, relpath: str) -> bool:
+        return relpath.startswith(self._SCOPES) and relpath.endswith(".py")
+
+    def check_tree(self, ctx, relpath, text, tree):
+        return [_at(node, self._MSG) for node in ast.walk(tree) if isinstance(node, ast.Assert)]
+
+
+# ---------------------------------------------------------------------------
+# R003 — recompile hazards
+# ---------------------------------------------------------------------------
+@register_rule
+class RecompileHazardRule(Rule):
+    """A ``jax.jit`` (or ``functools.partial(jax.jit, ...)``) built
+    inside a loop compiles a fresh executable every iteration — the
+    cache key is the wrapper object, not the wrapped function. And a
+    computed ``static_argnums``/``static_argnames`` value (or an
+    unhashable literal) either recompiles per call or raises at trace
+    time. Build jits once, outside the loop, with literal static
+    specs."""
+
+    rule_id = "R003"
+    title = "jit rebuilt in a loop / data-dependent static args"
+
+    _JIT_CHAINS = (("jax", "jit"), ("jit",))
+    _LAZY = (
+        ast.Dict,
+        ast.Set,
+        ast.ListComp,
+        ast.SetComp,
+        ast.DictComp,
+        ast.GeneratorExp,
+    )
+    _COMPUTED = (ast.Call, ast.BinOp, ast.BoolOp, ast.IfExp)
+    _MSG_LOOP = (
+        "jax.jit built inside a loop recompiles every iteration (the "
+        "cache key is the new wrapper) — hoist the jit out of the loop"
+    )
+
+    def applies(self, relpath: str) -> bool:
+        return is_scanned_python(relpath)
+
+    def check_tree(self, ctx, relpath, text, tree):
+        out = []
+        self._walk(tree, 0, out)
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call) and self._is_jit(node):
+                out.extend(self._check_static_args(node))
+        return out
+
+    @classmethod
+    def _is_jit(cls, call: ast.Call) -> bool:
+        chain = _attr_chain(call.func)
+        if chain and tuple(chain) in cls._JIT_CHAINS:
+            return True
+        # functools.partial(jax.jit, ...)
+        if chain and chain[-1] == "partial" and call.args:
+            inner = _attr_chain(call.args[0])
+            return bool(inner) and tuple(inner) in cls._JIT_CHAINS
+        return False
+
+    def _walk(self, node: ast.AST, loop_depth: int, out: list) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+                self._walk(child, 0, out)  # fresh scope: runs per call, not per iter
+            elif isinstance(child, (ast.For, ast.While, ast.AsyncFor)):
+                self._walk(child, loop_depth + 1, out)
+            else:
+                if loop_depth and isinstance(child, ast.Call) and self._is_jit(child):
+                    out.append(_at(child, self._MSG_LOOP))
+                self._walk(child, loop_depth, out)
+
+    @classmethod
+    def _check_static_args(cls, call: ast.Call) -> list:
+        out = []
+        for kw in call.keywords:
+            if kw.arg not in ("static_argnums", "static_argnames"):
+                continue
+            bad = None
+            v = kw.value
+            if isinstance(v, cls._LAZY):
+                bad = "unhashable/lazy"
+            elif isinstance(v, cls._COMPUTED):
+                bad = "computed (data-dependent)"
+            elif isinstance(v, (ast.Tuple, ast.List)):
+                if any(not isinstance(e, ast.Constant) for e in v.elts):
+                    bad = "non-literal element in"
+            if bad:
+                msg = (
+                    f"{bad} {kw.arg} value — static args are jit cache keys "
+                    "and must be hashable compile-time literals; a "
+                    "data-dependent value recompiles per distinct value or "
+                    "raises"
+                )
+                out.append(_at(kw.value, msg))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# R004 — host syncs inside the serve decode loop
+# ---------------------------------------------------------------------------
+@register_rule
+class HostSyncRule(Rule):
+    """The §9 pipelining invariant: the decode loop chains device-
+    resident steps and never blocks on a device value, so dispatches
+    queue ahead of execution. A ``.item()`` / ``np.asarray(device_val)``
+    / ``block_until_ready`` / ``float(jnp...)`` inside a decode-loop
+    body drains the pipeline every step. The loop's *deliberate* sync
+    points carry a reasoned ``repro: noqa[R004]`` comment — one per
+    round, with the reason in the source."""
+
+    rule_id = "R004"
+    title = "host sync inside a serve decode-loop body"
+
+    # the decode-loop bodies of any *Engine class (ServeEngine today)
+    _METHODS = ("step", "run", "serve", "_spec_round", "_ngram_run")
+    _BLOCK_CHAINS = (("jax", "block_until_ready"), ("jax", "device_get"))
+    _ASARRAY_CHAINS = (("np", "asarray"), ("numpy", "asarray"))
+    _MSG_ITEM = (
+        ".item() blocks on the device inside the decode loop — keep the "
+        "value device-resident or mark the deliberate sync with a "
+        "reasoned noqa"
+    )
+    _MSG_ASARRAY = (
+        "np.asarray on a device value blocks the decode loop; fetch once "
+        "per round at a named sync point (reasoned noqa) or keep it on "
+        "device"
+    )
+
+    def applies(self, relpath: str) -> bool:
+        return is_scanned_python(relpath)
+
+    def check_tree(self, ctx, relpath, text, tree):
+        out = []
+        for node in ast.walk(tree):
+            if isinstance(node, ast.ClassDef) and node.name.endswith("Engine"):
+                for item in node.body:
+                    is_fn = isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef))
+                    if is_fn and item.name in self._METHODS:
+                        self._check_body(item, out)
+        return out
+
+    def _check_body(self, fn: ast.AST, out: list) -> None:
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            chain = _attr_chain(node.func)
+            if isinstance(node.func, ast.Attribute) and node.func.attr == "item":
+                out.append(_at(node, self._MSG_ITEM))
+            elif chain and tuple(chain) in self._BLOCK_CHAINS:
+                msg = (
+                    f"{'.'.join(chain)} drains the dispatch pipeline inside "
+                    "the decode loop (§9 lazy-token contract)"
+                )
+                out.append(_at(node, msg))
+            elif chain and tuple(chain) in self._ASARRAY_CHAINS:
+                out.append(_at(node, self._MSG_ASARRAY))
+            elif (
+                isinstance(node.func, ast.Name)
+                and node.func.id in ("float", "int", "len", "bool")
+                and node.args
+                and self._mentions_device(node.args[0])
+            ):
+                msg = (
+                    f"{node.func.id}(...) of a jax expression syncs the "
+                    "host inside the decode loop"
+                )
+                out.append(_at(node, msg))
+
+    @staticmethod
+    def _mentions_device(node: ast.AST) -> bool:
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Name) and sub.id in ("jnp", "jax"):
+                return True
+        return False
+
+
+# ---------------------------------------------------------------------------
+# R005 — deprecated entry points
+# ---------------------------------------------------------------------------
+@register_rule
+class DeprecatedEntryRule(Rule):
+    """PR 4/PR 5 collapsed the legacy entry points into
+    ``repro.api.quantize`` and ``repro.serve``; the old names survive
+    as parity-tested ``DeprecationWarning`` wrappers for exactly one
+    purpose — external callers mid-migration. New non-test code calling
+    them re-grows the split API the refactors removed."""
+
+    rule_id = "R005"
+    title = "deprecated entry point called from non-test code"
+
+    # module -> deprecated names (None = the whole module is a shim)
+    _DEPRECATED: dict[str, set | None] = {
+        "repro.runtime.serve_loop": None,
+        "repro.runtime.quantized_params": {"quantize_params_for_serving"},
+        "repro.models.cnn": {"quantize_params"},
+        "repro.core.methodology": {"convert"},
+    }
+    _NEW_HOME = {
+        "repro.runtime.serve_loop": "repro.serve",
+        "quantize_params_for_serving": "repro.api.quantize",
+        "quantize_params": "repro.api.quantize",
+        "convert": "repro.api.quantize (or core.methodology.run_methodology)",
+    }
+    # the defining modules themselves (and the package façade re-exports)
+    _DEFINING = (
+        "src/repro/runtime/serve_loop.py",
+        "src/repro/runtime/quantized_params.py",
+        "src/repro/models/cnn.py",
+        "src/repro/core/methodology.py",
+        "src/repro/runtime/__init__.py",
+    )
+    # attribute-call shapes: (root name, attr)
+    _ATTR_CALLS = {
+        ("serve_loop", "make_serve_fns"),
+        ("serve_loop", "generate"),
+        ("quantized_params", "quantize_params_for_serving"),
+        ("cnn", "quantize_params"),
+        ("methodology", "convert"),
+    }
+
+    def applies(self, relpath: str) -> bool:
+        return is_scanned_python(relpath) and relpath not in self._DEFINING
+
+    def check_tree(self, ctx, relpath, text, tree):
+        out = []
+        for node in ast.walk(tree):
+            if isinstance(node, ast.ImportFrom) and node.module in self._DEPRECATED:
+                names = self._DEPRECATED[node.module]
+                if names is None:
+                    home = self._NEW_HOME[node.module]
+                    msg = f"{node.module} is a deprecated shim module — import from {home}"
+                    out.append(_at(node, msg))
+                else:
+                    for a in node.names:
+                        if a.name in names:
+                            msg = (
+                                f"{node.module}.{a.name} is a deprecated "
+                                f"wrapper — use {self._NEW_HOME[a.name]}"
+                            )
+                            out.append(_at(node, msg))
+            elif isinstance(node, ast.Import):
+                for a in node.names:
+                    shim = a.name in self._DEPRECATED and self._DEPRECATED[a.name] is None
+                    if shim:
+                        msg = (
+                            f"{a.name} is a deprecated shim module — "
+                            f"import from {self._NEW_HOME[a.name]}"
+                        )
+                        out.append(_at(node, msg))
+            elif isinstance(node, ast.Call):
+                chain = _attr_chain(node.func)
+                if not chain or len(chain) < 2:
+                    continue
+                if (chain[-2], chain[-1]) in self._ATTR_CALLS:
+                    name = chain[-1]
+                    home = self._NEW_HOME.get(name, "repro.serve")
+                    msg = f"{'.'.join(chain[-2:])} is a deprecated wrapper — use {home}"
+                    out.append(_at(node, msg))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# R006 — pytree registration hygiene
+# ---------------------------------------------------------------------------
+@register_rule
+class PytreeAuxRule(Rule):
+    """A registered pytree's aux data is hashed into every jit cache
+    key — an unhashable aux leaf (list/dict/set) breaks tracing, and a
+    ``tree_flatten`` that silently drops an ``__init__`` field builds
+    artifacts that un/reflatten into different objects (save/load and
+    device_put round-trips corrupt state). Every field must appear in
+    the flatten (as child or aux), and aux displays must be hashable."""
+
+    rule_id = "R006"
+    title = "registered pytree with unhashable aux or flatten drift"
+
+    _REGISTER_FNS = ("register_pytree_with_keys_class", "register_pytree_node_class")
+    _FLATTEN_FNS = ("tree_flatten", "tree_flatten_with_keys")
+
+    def applies(self, relpath: str) -> bool:
+        return is_scanned_python(relpath)
+
+    def check_tree(self, ctx, relpath, text, tree):
+        registered: set[str] = set()
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call):
+                # register_pytree_node_class(Cls) call form
+                chain = _attr_chain(node.func)
+                if chain and chain[-1] in self._REGISTER_FNS and node.args:
+                    arg = node.args[0]
+                    if isinstance(arg, ast.Name):
+                        registered.add(arg.id)
+            elif isinstance(node, ast.ClassDef):
+                # @register_pytree_node_class decorator form
+                for dec in node.decorator_list:
+                    target = dec.func if isinstance(dec, ast.Call) else dec
+                    chain = _attr_chain(target)
+                    if chain and chain[-1] in self._REGISTER_FNS:
+                        registered.add(node.name)
+        if not registered:
+            return []
+        out = []
+        for node in ast.walk(tree):
+            if isinstance(node, ast.ClassDef) and node.name in registered:
+                out.extend(self._check_class(node))
+        return out
+
+    def _check_class(self, cls: ast.ClassDef) -> list:
+        fields = self._init_fields(cls)
+        flattens = [
+            f
+            for f in cls.body
+            if isinstance(f, ast.FunctionDef) and f.name in self._FLATTEN_FNS
+        ]
+        out = []
+        for fn in flattens:
+            reads = {
+                n.attr
+                for n in ast.walk(fn)
+                if isinstance(n, ast.Attribute)
+                and isinstance(n.value, ast.Name)
+                and n.value.id == "self"
+            }
+            missing = sorted(f for f in fields if f not in reads)
+            if missing:
+                msg = (
+                    f"{cls.name}.{fn.name} drops field(s) {', '.join(missing)} "
+                    "set in __init__ — unflatten rebuilds a different object "
+                    "(children + aux must cover every field)"
+                )
+                out.append(_at(fn, msg))
+            for ret in ast.walk(fn):
+                if not isinstance(ret, ast.Return) or ret.value is None:
+                    continue
+                aux = None
+                if isinstance(ret.value, ast.Tuple) and len(ret.value.elts) == 2:
+                    aux = ret.value.elts[1]
+                if aux is None:
+                    continue
+                for sub in ast.walk(aux):
+                    if isinstance(sub, (ast.List, ast.Dict, ast.Set)):
+                        msg = (
+                            f"{cls.name}.{fn.name} aux contains an "
+                            "unhashable display (list/dict/set) — aux data "
+                            "keys jit caches and must be hashable (use "
+                            "tuples)"
+                        )
+                        out.append(_at(sub, msg))
+                        break
+        return out
+
+    @staticmethod
+    def _init_fields(cls: ast.ClassDef) -> set[str]:
+        """Public dataclass fields / ``self.X = ...`` __init__ targets."""
+        fields: set[str] = set()
+        for item in cls.body:
+            if isinstance(item, ast.AnnAssign) and isinstance(item.target, ast.Name):
+                ann = item.annotation
+                chain = _attr_chain(ann) if isinstance(ann, ast.Attribute) else None
+                if isinstance(ann, ast.Name) and ann.id == "ClassVar":
+                    continue
+                if chain and chain[-1] == "ClassVar":
+                    continue
+                if isinstance(ann, ast.Subscript):
+                    base = ann.value
+                    if isinstance(base, ast.Name) and base.id == "ClassVar":
+                        continue
+                fields.add(item.target.id)
+            elif isinstance(item, ast.FunctionDef) and item.name == "__init__":
+                for node in ast.walk(item):
+                    if not isinstance(node, ast.Assign):
+                        continue
+                    for tgt in node.targets:
+                        if (
+                            isinstance(tgt, ast.Attribute)
+                            and isinstance(tgt.value, ast.Name)
+                            and tgt.value.id == "self"
+                        ):
+                            fields.add(tgt.attr)
+        return {f for f in fields if not f.startswith("_")}
+
+
+# ---------------------------------------------------------------------------
+# R007 — DESIGN.md section references (was scripts/docs_check.py)
+# ---------------------------------------------------------------------------
+@register_rule
+class SectionRefRule(Rule):
+    """DESIGN.md is the architecture contract and everything cross-
+    references it by section number. Renumbering or dropping a section
+    silently strands every reference; this resolves each ``DESIGN.md
+    §N`` (and comma lists ``§9, §12``) against the actual ``## §N``
+    headers. Bare ``§Perf``-style shorthands are historical prose and
+    out of scope — same contract as the old ``scripts/docs_check.py``,
+    which now delegates here."""
+
+    rule_id = "R007"
+    title = "DESIGN.md §-reference with no matching header"
+
+    _REF = re.compile(r"DESIGN\.md\s+(§\d+(?:\s*,\s*§\d+)*)")
+
+    def applies(self, relpath: str) -> bool:
+        return relpath.endswith((".py", ".md", ".sh", ".yml"))
+
+    def check_text(self, ctx, relpath, text):
+        have = ctx.design_sections()
+        out = []
+        for lineno, line in enumerate(text.splitlines(), start=1):
+            for m in self._REF.finditer(line):
+                for n in re.findall(r"§(\d+)", m.group(1)):
+                    if int(n) not in have:
+                        msg = f"references DESIGN.md §{n}, which has no ## §-header"
+                        out.append((lineno, m.start(), msg))
+        return out

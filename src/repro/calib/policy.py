@@ -208,6 +208,7 @@ def fold_cnn_bias(params: dict, spec, table: CalibrationTable) -> dict:
         if isinstance(l, Conv):
             if sc is not None and sc.compensate and sc.err_mean is not None:
                 w = params[f"conv{idx}_w"]  # [kh, kw, cin, cout]
+                # repro: noqa[R001] err_mean is a tuple on a frozen dataclass
                 err = jnp.asarray(sc.err_mean, w.dtype)
                 delta = jnp.einsum("hwio,i->o", w.astype(jnp.float32), err)
                 out[f"conv{idx}_b"] = params[f"conv{idx}_b"] - delta.astype(
@@ -218,6 +219,7 @@ def fold_cnn_bias(params: dict, spec, table: CalibrationTable) -> dict:
         elif isinstance(l, Fc):
             if sc is not None and sc.compensate and sc.err_mean is not None:
                 w = params[f"fc{idx}_w"]  # [fan_in, out]
+                # repro: noqa[R001] err_mean is a tuple on a frozen dataclass
                 err = jnp.asarray(sc.err_mean, jnp.float32)
                 if flat_ch is None:
                     # first fc eats the flattened [h, w, c] map (c fastest):

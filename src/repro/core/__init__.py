@@ -49,6 +49,7 @@ from repro.core.compensate import (
     mean_error_report,
 )
 from repro.core.energy import network_energy_nj, pdp_fj, pdp_reduction
+# repro: noqa[R005] legacy re-export kept for the deprecation window
 from repro.core.methodology import (
     ConversionResult,
     convert,

@@ -115,6 +115,7 @@ def compensate_tensor(
     ig, _, _ = _to_groups(qt.level_idx, group_axes)
     new_idx_g = compensate_groups(wg, ig, qt.levels)
     new_idx = _from_groups(new_idx_g, perm, t_shape)
+    # repro: noqa[R001] the level table is write-once after quantization
     lv = jnp.asarray(qt.levels)
     return QuantizedTensor(
         values=lv[new_idx].astype(qt.values.dtype),

@@ -86,7 +86,11 @@ def flash_attention(
         interpret = jax.default_backend() != "tpu"
     b, h, s, hd = q.shape
     sk = k.shape[2]
-    assert s % block_q == 0 and sk % block_k == 0, (s, sk, block_q, block_k)
+    if s % block_q != 0 or sk % block_k != 0:
+        raise ValueError(
+            f"sequence lengths must tile by the block sizes: s={s} "
+            f"block_q={block_q}, sk={sk} block_k={block_k} (callers pad)"
+        )
     scale = 1.0 / math.sqrt(hd)
     n_k = sk // block_k
     grid = (b * h, s // block_q, n_k)

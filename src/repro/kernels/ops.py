@@ -138,7 +138,10 @@ def pack_weight(
     """
     if isinstance(fmt, str):
         fmt = PRESET_FORMATS[fmt]
-    assert w.ndim >= 2, "pack_weight operates on [..., K, N] matmul weights"
+    if w.ndim < 2:
+        raise ValueError(
+            f"pack_weight operates on [..., K, N] matmul weights, got shape {w.shape}"
+        )
     if nibble is None:
         nibble = fmt.bits_per_weight <= 4
     if group_axes is None:
@@ -181,7 +184,11 @@ def pack_conv_weight(
     """
     if isinstance(fmt, str):
         fmt = PRESET_FORMATS[fmt]
-    assert w.ndim == 4, "pack_conv_weight operates on [kh, kw, cin, cout] weights"
+    if w.ndim != 4:
+        raise ValueError(
+            "pack_conv_weight operates on [kh, kw, cin, cout] weights, "
+            f"got shape {w.shape}"
+        )
     if granularity == "per_slice":
         raise ValueError("per_slice granularity is for stacked matmuls, not convs")
     if nibble is None:

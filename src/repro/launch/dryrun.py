@@ -39,7 +39,7 @@ from repro.models import get_model
 from repro.optim import adamw
 from repro.runtime import sharding as shr
 from repro.runtime.train_loop import TrainSetup, abstract_state, make_train_step, state_shardings
-from repro.runtime.serve_loop import ServeSetup
+from repro.serve import ServeSetup
 
 
 def model_flops(cfg: ArchConfig, shape: ShapeConfig) -> float:

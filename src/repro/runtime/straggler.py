@@ -58,6 +58,20 @@ class StragglerMonitor:
         self._times.append(dt)
         return straggled
 
+    def snapshot(self) -> dict:
+        """Immutable copy of the monitor's mutable state.
+
+        The blessed boundary for handing the rolling window across a
+        thread or into device code (rule R001): ``_times``/``_events``
+        are mutated by ``record`` on the serve thread, so consumers get
+        value-copied tuples, never an alias of the live deques.
+        """
+        return {
+            "times": tuple(self._times),
+            "events": tuple(self._events),
+            "report": self.report(),
+        }
+
     def report(self) -> dict:
         """Slow-step summary: rolling median, event totals, distribution.
 

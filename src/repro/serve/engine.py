@@ -935,7 +935,11 @@ class ServeEngine:
         the request's first emitted token comes from that admission
         dispatch, so TTFT is one prefill regardless of sharing.
         """
-        prompt = np.asarray(tokens, np.int32).reshape(-1)
+        prompt = np.array(tokens, np.int32).reshape(-1)
+        # frozen for its lifetime: admission hands `prompt` to jnp.asarray
+        # (potentially zero-copy), which is only alias-safe because no one
+        # can write the buffer afterwards
+        prompt.setflags(write=False)
         if prompt.size == 0:
             raise ValueError("empty prompt")
         if max_new_tokens < 1:
@@ -1021,21 +1025,26 @@ class ServeEngine:
                 # scopes the writes; no other slot's pages appear in it.
                 n_shared = self._pager.admit(slot, req.prompt)
                 self._m_prefix_hits.inc(n_shared // self.setup.page_size)
-                # np.array COPIES: jnp.asarray can zero-copy-alias a
-                # host numpy buffer on CPU, and the allocator mutates
-                # `table` in place on the next admit/release while the
-                # async dispatch may not have read this view yet
-                row = jnp.asarray(np.array(self._pager.table[slot : slot + 1]))
+                # to_device COPIES (the blessed crossing): the
+                # allocator mutates `table` in place on the next
+                # admit/release while the async dispatch may not have
+                # read this view yet
+                row = self._pager.to_device(slot)
                 pos0 = jnp.asarray([n_shared], jnp.int32)
+                # repro: noqa[R001] prompt is frozen read-only at submit
                 suffix = jnp.asarray(req.prompt[None, n_shared:])
                 logits, newc = self._prefill(
                     self.params, suffix, {**self._cache, "pages": row}, pos0
                 )
-                self._cache = {**newc, "pages": jnp.asarray(np.array(self._pager.table))}
+                self._cache = {**newc, "pages": self._pager.to_device()}
                 self._pager.register(slot, req.prompt)
             else:
                 logits, self._cache = self._prefill(
-                    self.params, jnp.asarray(req.prompt[None]), self._cache, jnp.int32(slot)
+                    self.params,
+                    # repro: noqa[R001] prompt is frozen read-only at submit
+                    jnp.asarray(req.prompt[None]),
+                    self._cache,
+                    jnp.int32(slot),
                 )
             self._prefills += 1
             if self.spec_k and self.spec_draft == "model":
@@ -1051,13 +1060,11 @@ class ServeEngine:
                         {**self._draft_cache, "pages": row},
                         pos0,
                     )
-                    self._draft_cache = {
-                        **newdc,
-                        "pages": jnp.asarray(np.array(self._pager.table)),
-                    }
+                    self._draft_cache = {**newdc, "pages": self._pager.to_device()}
                 else:
                     _, self._draft_cache = self._draft_prefill(
                         self.draft_params,
+                        # repro: noqa[R001] prompt is frozen read-only at submit
                         jnp.asarray(req.prompt[None]),
                         self._draft_cache,
                         jnp.int32(slot),
@@ -1066,6 +1073,7 @@ class ServeEngine:
                 # the lookup drafter chains from the pending token's
                 # VALUE, so admission syncs it (one scalar fetch riding
                 # the prefill dispatch it already paid for)
+                # repro: noqa[R004] deliberate: ngram drafting needs the token value
                 first = int(np.asarray(jnp.argmax(logits, axis=-1))[0])
                 req.out.append(first)
                 self._pending[slot] = first
@@ -1074,6 +1082,7 @@ class ServeEngine:
                 req.out.append((first, 0))
                 self._tok_dev = self._tok_dev.at[slot, 0].set(first[0])
             else:
+                # repro: noqa[R004] deliberate: sampling draws on host (§9)
                 tok = self._select(req, np.asarray(logits)[0])
                 req.out.append(tok)
                 self._tok_dev = self._tok_dev.at[slot, 0].set(tok)
@@ -1137,6 +1146,7 @@ class ServeEngine:
                 logits, self._cache = self._decode(
                     self.params, self._tok_dev, cache_in, pos
                 )
+                # repro: noqa[R004] deliberate: sampled decode fetches logits (§9)
                 logits = np.asarray(jax.block_until_ready(logits))
                 dt = time.perf_counter() - t0
                 self.monitor.record(dt)
@@ -1335,19 +1345,18 @@ class ServeEngine:
     def _dispatch_cache(self, cache: Any = None) -> Any:
         """The cache tree a dispatch consumes.
 
-        For the paged layout the ``pages`` leaf is refreshed from a
-        COPY of the host page table (the allocator is
-        host-authoritative: admission and release mutate
-        ``self._pager.table`` in place between dispatches, and
-        ``jnp.asarray`` can zero-copy-alias a host numpy buffer on CPU
-        — an aliased view would let the next admission rewrite the page
-        mapping under a still-pending dispatch); the dense layout
-        passes the persistent cache straight through.
+        For the paged layout the ``pages`` leaf is refreshed through
+        :meth:`PageTable.to_device` — the blessed copying crossing (the
+        allocator is host-authoritative: admission and release mutate
+        ``self._pager.table`` in place between dispatches, and a
+        zero-copy ``jnp.asarray`` alias would let the next admission
+        rewrite the page mapping under a still-pending dispatch); the
+        dense layout passes the persistent cache straight through.
         """
         cache = self._cache if cache is None else cache
         if not self._paged:
             return cache
-        return {**cache, "pages": jnp.asarray(np.array(self._pager.table))}
+        return {**cache, "pages": self._pager.to_device()}
 
     def _spec_round(self, live: dict[int, Request]) -> None:
         """One speculative draft/verify round (DESIGN.md §10).
@@ -1414,7 +1423,9 @@ class ServeEngine:
         # dispatch-clocked like the plain path: one record per round
         dt = time.perf_counter() - t0
         self.monitor.record(dt)
-        acc_np = np.asarray(acc)  # the round's one blocking sync
+        # repro: noqa[R004] deliberate: the round's one blocking sync (§10)
+        acc_np = np.asarray(acc)
+        # repro: noqa[R004] deliberate: ngram rounds pull the [B, W] run once (§10)
         vtok_np = np.asarray(vtok) if self.spec_draft == "ngram" else None
         acc_sum = 0
         n_live = len(live)  # snapshot: _maybe_finish pops from live

@@ -24,10 +24,12 @@ Sharing contract (why copy-on-write never needs an actual copy):
     slot reads.
 
 All state is host numpy — the device only ever sees the ``[n_slots,
-Pmax]`` int32 table, refreshed per dispatch by the engine.
+Pmax]`` int32 table, refreshed per dispatch by the engine through
+:meth:`PageTable.to_device` (the blessed copy-on-crossing boundary).
 """
 from __future__ import annotations
 
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -93,6 +95,20 @@ class PageTable:
     @property
     def pages_shared(self) -> int:
         return int(np.count_nonzero(self.refs > 1))
+
+    def to_device(self, slot: int | None = None) -> jnp.ndarray:
+        """Device copy of the page table (whole ``[n_slots, Pmax]``
+        table, or one slot's row as ``[1, Pmax]`` when ``slot`` given).
+
+        This is the blessed host→device crossing for the table (rule
+        R001): ``admit``/``release`` mutate ``table`` in place while
+        earlier async dispatches may still be reading it, so the device
+        must always receive a snapshot copy — never a zero-copy alias
+        of the live buffer (the PR 8 page-table race).
+        """
+        if slot is None:
+            return jnp.asarray(np.array(self.table))
+        return jnp.asarray(np.array(self.table[slot : slot + 1]))
 
     def _prefix_key(self, prompt: np.ndarray, n_pages: int) -> bytes:
         return np.ascontiguousarray(

@@ -1,0 +1,15 @@
+"""R000 corpus: suppression hygiene (analyzed under a kernels/ path).
+
+Line by line: a bare suppression (R000 + the R002 stays live), an
+unknown rule id (R000 + live R002), a valid same-line suppression, and
+the comment-line form covering the next line.
+"""
+
+
+def f(x):
+    assert x  # repro: noqa[R002]
+    assert x  # repro: noqa[R999] not a real rule
+    assert x  # repro: noqa[R002] justified: corpus fixture
+    # repro: noqa[R002] comment-line form covers the next line
+    assert x
+    return x

@@ -1,0 +1,30 @@
+"""R001 negatives: the blessed copy-at-the-crossing idioms.
+
+Every shape here is what the fixed engine actually does; none may
+flag (the whole-repo zero-false-positive guarantee in miniature).
+"""
+import jax.numpy as jnp
+import numpy as np
+
+
+class Engine:
+    def ok_wrapped_copy(self):
+        # the PR 5 fix: np.array COPIES before the crossing
+        return jnp.asarray(np.array(self._pos))
+
+    def ok_boundary_methods(self):
+        # the PR 9 blessed boundary methods
+        a = self._pager.to_device()
+        b = jnp.asarray(self.monitor.snapshot()["times"])
+        return a, b
+
+    def ok_method_result(self):
+        # a method result is a fresh object, not a tracked buffer
+        return jnp.asarray(self.fmt.levels())
+
+    def ok_module_constant(self):
+        # np is an import alias: np.pi is a module constant, not state
+        return jnp.asarray(np.pi)
+
+    def ok_local_literal(self):
+        return jnp.asarray([1, 2, 3]), jnp.array(self._pos)

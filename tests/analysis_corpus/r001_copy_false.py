@@ -1,0 +1,6 @@
+"""R001 positive: jnp.array(..., copy=False) requests the alias."""
+import jax.numpy as jnp
+
+
+def stage(buf):
+    return jnp.array(buf, copy=False)

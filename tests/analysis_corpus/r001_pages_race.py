@@ -1,0 +1,16 @@
+"""R001 positive: the PR 8 page-table race, verbatim pre-fix shape.
+
+The allocator mutates `table` in place on the next admit/release while
+the still-pending dispatch may not have read this view yet.
+"""
+import jax.numpy as jnp
+
+
+class Engine:
+    def _dispatch_cache(self, cache):
+        # BUG (pre-fix PR 8): zero-copy alias of the live page table
+        return {**cache, "pages": jnp.asarray(self._pager.table)}
+
+    def admit_row(self, slot):
+        # BUG: sliced view of the same live buffer
+        return jnp.asarray(self._pager.table[slot : slot + 1])

@@ -1,0 +1,21 @@
+"""R001 positive: the PR 5 `_pos` race, verbatim pre-fix shape.
+
+`self._pos` is mutated in place right after the dispatch; the aliased
+view lets the async decode read torn positions. Excluded from the repo
+sweep (EXCLUDE_DIRS) — this file is test input, not code.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+
+class Engine:
+    def __init__(self, n_slots):
+        self._pos = np.zeros(n_slots, np.int32)
+
+    def step(self, live, decode, params, tok, cache):
+        # BUG (pre-fix PR 5): zero-copy alias of the live position buffer
+        pos = jnp.asarray(self._pos)
+        nxt, cache = decode(params, tok, cache, pos)
+        for slot in live:
+            self._pos[slot] += 1
+        return nxt, cache

@@ -1,0 +1,13 @@
+"""R002 corpus: bare asserts (analyzed under a kernels/ relpath).
+
+Positives: the two asserts. Negative: the ValueError form (the PR 3
+contract) never flags.
+"""
+
+
+def pack(w, block_q, s):
+    assert w.ndim >= 2, "bad shape"
+    if s % block_q:
+        raise ValueError(f"s={s} must tile by block_q={block_q}")
+    assert s > 0
+    return w

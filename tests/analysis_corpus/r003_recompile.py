@@ -1,0 +1,39 @@
+"""R003 corpus: jits rebuilt in loops, data-dependent static specs."""
+import functools
+
+import jax
+
+
+def bench(shapes, fn, n):
+    for s in shapes:
+        step = jax.jit(fn)  # positive: fresh executable per iteration
+        step(s)
+    while n:
+        g = functools.partial(jax.jit, donate_argnums=(0,))(fn)  # positive
+        g(n)
+        n -= 1
+
+
+def build(fn, names, flag):
+    a = jax.jit(fn, static_argnums=compute_nums())  # positive: computed
+    b = jax.jit(fn, static_argnames=[n for n in names])  # positive: lazy
+    c = jax.jit(fn, static_argnums=(0, arity))  # positive: non-literal elt
+    d = jax.jit(fn, static_argnums=(0, 1))  # negative: literal tuple
+    e = jax.jit(fn, static_argnames=("block_q",))  # negative
+    return a, b, c, d, e
+
+
+def per_call(fn, xs):
+    # negative: the jit is built once per CALL of this closure factory,
+    # not per loop iteration — a fresh scope resets the loop depth
+    def inner():
+        return jax.jit(fn)
+
+    return [inner() for _ in xs]
+
+
+def compute_nums():
+    return (0,)
+
+
+arity = 1

@@ -1,0 +1,35 @@
+"""R004 corpus: host syncs inside decode-loop bodies.
+
+Positives live in ServeEngine.step/_spec_round; negatives: the same
+calls outside an Engine class or outside the named methods.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class ServeEngine:
+    def step(self, logits, acc):
+        a = int(jnp.argmax(logits))  # positive: int(...) of a jax expr
+        b = acc.item()  # positive
+        c = np.asarray(logits)  # positive
+        d = jax.block_until_ready(logits)  # positive
+        return a, b, c, d
+
+    def _spec_round(self, acc):
+        return np.asarray(acc)  # positive
+
+    def cache_stats(self):
+        # negative: not a decode-loop body — introspection may sync
+        return int(np.count_nonzero(self.refs))
+
+
+class PageAllocator:
+    def step(self, row):
+        # negative: not an *Engine class
+        return np.asarray(row)
+
+
+def helper(logits):
+    # negative: module-level function
+    return np.asarray(logits)

@@ -1,0 +1,14 @@
+"""R005 corpus: calls into the PR 4/PR 5 deprecation shims."""
+from repro.runtime.serve_loop import make_serve_fns  # positive: shim module
+from repro.runtime.quantized_params import quantize_params_for_serving  # positive
+from repro.core.methodology import convert  # positive
+from repro.core.methodology import run_methodology  # negative: not deprecated
+from repro.models import cnn
+
+
+def run(params, fmt):
+    a = cnn.quantize_params(params, fmt)  # positive: attribute call
+    b = convert(params, fmt)
+    c = run_methodology(params)
+    d = make_serve_fns, quantize_params_for_serving
+    return a, b, c, d

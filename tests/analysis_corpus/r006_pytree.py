@@ -1,0 +1,59 @@
+"""R006 corpus: pytree registration hygiene."""
+import jax
+
+
+@jax.tree_util.register_pytree_node_class
+class Drifting:
+    def __init__(self, codes, sf, fmt_name):
+        self.codes = codes
+        self.sf = sf
+        self.fmt_name = fmt_name
+
+    def tree_flatten(self):
+        # positive: drops fmt_name — unflatten rebuilds a different object
+        return (self.codes, self.sf), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, "a")
+
+
+@jax.tree_util.register_pytree_node_class
+class UnhashableAux:
+    def __init__(self, codes, meta):
+        self.codes = codes
+        self.meta = meta
+
+    def tree_flatten(self):
+        # positive: list aux is unhashable — it keys jit caches
+        return (self.codes,), [self.meta]
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux[0])
+
+
+@jax.tree_util.register_pytree_node_class
+class Clean:
+    def __init__(self, codes, sf, fmt_name):
+        self.codes = codes
+        self.sf = sf
+        self.fmt_name = fmt_name
+
+    def tree_flatten(self):
+        return (self.codes, self.sf), (self.fmt_name,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+
+class Unregistered:
+    """Negative: never registered — flatten drift here is fine."""
+
+    def __init__(self, a, b):
+        self.a = a
+        self.b = b
+
+    def tree_flatten(self):
+        return (self.a,), ()

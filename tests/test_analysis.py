@@ -1,0 +1,265 @@
+"""The static-analysis pass (`python -m repro.analysis`; DESIGN.md §13).
+
+Tier-1 coverage of the rule engine against the deliberate-positive
+corpus in `tests/analysis_corpus/` — including the verbatim pre-fix
+shapes of the PR 5 `_pos` race and the PR 8 page-table race — plus the
+suppression contract, the baseline round-trip, the JSON report shape,
+and the whole-repo sweep against the committed baseline.
+
+This test file itself is swept by the text rules, so suppression
+comments inside test sources are built by concatenation (the same
+trick test_docs.py uses for §-references).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import (
+    DEFAULT_BASELINE,
+    REPO_ROOT,
+    RULES,
+    AnalysisContext,
+    BaselineError,
+    analyze_repo,
+    analyze_source,
+    compare_to_baseline,
+    findings_to_json,
+    load_baseline,
+    make_baseline,
+    parse_suppressions,
+    validate_baseline,
+)
+
+CORPUS = os.path.join(os.path.dirname(os.path.abspath(__file__)), "analysis_corpus")
+
+# assembled so this file's own source stays clean under the R000 sweep
+NOQA = "# repro" + ": noqa"
+
+
+def run_fixture(name: str, relpath: str):
+    with open(os.path.join(CORPUS, name)) as f:
+        text = f.read()
+    return analyze_source(relpath, text, AnalysisContext())
+
+
+def rule_findings(findings, rule):
+    return [f for f in findings if f.rule == rule and not f.suppressed]
+
+
+# -- registry ---------------------------------------------------------------
+def test_all_rules_registered():
+    assert set(RULES) == {f"R{n:03d}" for n in range(1, 8)}
+
+
+# -- R001: the motivating races, verbatim -----------------------------------
+def test_r001_flags_the_pr5_pos_race():
+    fs = rule_findings(run_fixture("r001_pos_race.py", "src/repro/serve/x.py"), "R001")
+    assert len(fs) == 1
+    assert fs[0].text == "pos = jnp.asarray(self._pos)"
+
+
+def test_r001_flags_the_pr8_page_table_race():
+    fs = rule_findings(run_fixture("r001_pages_race.py", "src/repro/serve/x.py"), "R001")
+    assert len(fs) == 2
+    assert any("self._pager.table" in f.text and "np.array" not in f.text for f in fs)
+    assert any("[slot : slot + 1]" in f.text for f in fs)
+
+
+def test_r001_flags_requested_aliasing():
+    fs = rule_findings(run_fixture("r001_copy_false.py", "src/repro/core/x.py"), "R001")
+    assert len(fs) == 1 and "copy=False" in fs[0].text
+
+
+def test_r001_zero_false_positives_on_blessed_idioms():
+    fs = run_fixture("r001_blessed.py", "src/repro/serve/x.py")
+    assert rule_findings(fs, "R001") == []
+
+
+# -- R002 -------------------------------------------------------------------
+def test_r002_flags_bare_asserts_in_hot_paths_only():
+    fs = rule_findings(run_fixture("r002_asserts.py", "src/repro/kernels/x.py"), "R002")
+    assert len(fs) == 2
+    assert all(f.text.startswith("assert ") for f in fs)
+    # outside the hot-path scopes the same source is silent
+    assert rule_findings(run_fixture("r002_asserts.py", "src/repro/obs/x.py"), "R002") == []
+
+
+# -- R003 -------------------------------------------------------------------
+def test_r003_recompile_hazards():
+    fs = rule_findings(run_fixture("r003_recompile.py", "benchmarks/x.py"), "R003")
+    texts = "\n".join(f.text for f in fs)
+    assert len(fs) == 5
+    assert "step = jax.jit(fn)" in texts  # jit in a for loop
+    assert "functools.partial" in texts  # partial-wrapped jit in a while loop
+    assert "compute_nums()" in texts  # computed static_argnums
+    assert "[n for n in names]" in texts  # lazy static_argnames
+    assert "(0, arity)" in texts  # non-literal tuple element
+    # literal specs and fresh-scope factories never flag
+    assert "(0, 1)" not in texts and "def inner" not in texts
+
+
+# -- R004 -------------------------------------------------------------------
+def test_r004_decode_loop_syncs():
+    fs = rule_findings(run_fixture("r004_sync.py", "src/repro/serve/x.py"), "R004")
+    assert len(fs) == 5
+    lines = {f.text for f in fs}
+    assert any("int(jnp.argmax" in t for t in lines)
+    assert any(".item()" in t for t in lines)
+    assert any("jax.block_until_ready" in t for t in lines)
+    # introspection methods, non-Engine classes, free functions: silent
+    assert not any("count_nonzero" in t for t in lines)
+    assert not any("return np.asarray(row)" in t for t in lines)
+
+
+# -- R005 -------------------------------------------------------------------
+def test_r005_deprecated_entry_points():
+    fs = rule_findings(run_fixture("r005_deprecated.py", "src/repro/launch/x.py"), "R005")
+    msgs = "\n".join(f.message for f in fs)
+    assert len(fs) == 4
+    assert "repro.runtime.serve_loop" in msgs and "repro.serve" in msgs
+    assert "quantize_params_for_serving" in msgs
+    assert "methodology.convert" in msgs
+    assert "cnn.quantize_params" in msgs
+    assert not any("run_methodology" in f.text for f in fs)
+
+
+def test_r005_defining_modules_are_exempt():
+    fs = rule_findings(
+        run_fixture("r005_deprecated.py", "src/repro/runtime/serve_loop.py"), "R005"
+    )
+    assert fs == []
+
+
+# -- R006 -------------------------------------------------------------------
+def test_r006_pytree_hygiene():
+    fs = rule_findings(run_fixture("r006_pytree.py", "src/repro/models/x.py"), "R006")
+    assert len(fs) == 2
+    assert any("fmt_name" in f.message for f in fs)  # flatten drift
+    assert any("unhashable" in f.message for f in fs)  # list aux
+    assert not any("Clean" in f.message or "Unregistered" in f.message for f in fs)
+
+
+# -- R007 -------------------------------------------------------------------
+def test_r007_section_refs():
+    fs = rule_findings(run_fixture("r007_refs.md", "notes.md"), "R007")
+    assert len(fs) == 1
+    assert "§77" in fs[0].message
+
+
+# -- suppressions -----------------------------------------------------------
+def test_suppression_requires_reason_and_known_rule():
+    fs = run_fixture("r000_suppressions.py", "src/repro/kernels/x.py")
+    live = rule_findings(fs, "R002")
+    suppressed = [f for f in fs if f.rule == "R002" and f.suppressed]
+    hygiene = [f for f in fs if f.rule == "R000"]
+    assert len(live) == 2  # bare suppression + unknown rule id stay live
+    assert len(suppressed) == 2  # same-line and comment-line forms
+    assert {f.reason for f in suppressed} == {
+        "justified: corpus fixture",
+        "comment-line form covers the next line",
+    }
+    assert len(hygiene) == 2
+    msgs = "\n".join(f.message for f in hygiene)
+    assert "without a reason" in msgs and "R999" in msgs
+
+
+def test_parse_suppressions_forms():
+    src = (
+        f"x = f()  {NOQA}[R001] aliasing is fine here\n"
+        f"{NOQA}[R002, R004] covers the next line\n"
+        "assert x\n"
+    )
+    supps = parse_suppressions(src)
+    assert supps[1].rules == ("R001",)
+    assert supps[1].reason == "aliasing is fine here"
+    assert supps[2].rules == ("R002", "R004") and supps[3] is supps[2]
+
+
+def test_r000_cannot_be_suppressed():
+    src = f"assert x  {NOQA}[R002, R000]\n"
+    fs = analyze_source("src/repro/kernels/x.py", src, AnalysisContext())
+    assert any(f.rule == "R000" and not f.suppressed for f in fs)
+
+
+# -- baseline ---------------------------------------------------------------
+def test_baseline_round_trip(tmp_path):
+    findings = run_fixture("r002_asserts.py", "src/repro/kernels/x.py")
+    doc = make_baseline(findings)
+    validate_baseline(doc)
+    p = tmp_path / "b.json"
+    p.write_text(json.dumps(doc))
+    loaded = load_baseline(str(p))
+    new, stale = compare_to_baseline(findings, loaded)
+    assert new == [] and stale == []
+    # every finding fixed -> every entry reported stale
+    _, stale = compare_to_baseline([], loaded)
+    assert len(stale) == len(doc["findings"]) and doc["findings"]
+    # one more occurrence than the budget -> new
+    extra = [f for f in findings if not f.suppressed]
+    new, _ = compare_to_baseline(findings + extra[:1], loaded)
+    assert len(new) == 1
+
+
+@pytest.mark.parametrize(
+    "breakage",
+    [
+        {"schema_version": 2},
+        {"tool": "other"},
+        {"findings": {}},
+        {"findings": [{"rule": "R001", "path": "a.py", "text": "x"}]},  # no count
+        {"findings": [{"rule": "R001", "path": "a.py", "text": "x", "count": 0}]},
+        {"findings": [{"rule": "", "path": "a.py", "text": "x", "count": 1}]},
+        {"findings": [{"rule": "R001", "path": "a.py", "text": "x", "count": 1, "z": 1}]},
+        {
+            "findings": [
+                {"rule": "R001", "path": "a.py", "text": "x", "count": 1},
+                {"rule": "R001", "path": "a.py", "text": "x", "count": 2},
+            ]
+        },
+    ],
+)
+def test_baseline_schema_rejects(breakage):
+    doc = {"schema_version": 1, "tool": "repro.analysis", "findings": [], **breakage}
+    with pytest.raises(BaselineError):
+        validate_baseline(doc)
+
+
+# -- JSON report ------------------------------------------------------------
+def test_json_report_shape():
+    findings = run_fixture("r000_suppressions.py", "src/repro/kernels/x.py")
+    doc = findings_to_json(findings)
+    assert set(doc) == {
+        "schema_version", "tool", "findings", "counts", "total", "suppressed",
+    }
+    assert doc["schema_version"] == 1 and doc["tool"] == "repro.analysis"
+    assert doc["total"] == sum(doc["counts"].values())
+    assert doc["suppressed"] == 2
+    for e in doc["findings"]:
+        assert set(e) == {
+            "rule", "path", "line", "col", "message", "text", "suppressed", "reason",
+        }
+
+
+# -- the repo itself --------------------------------------------------------
+def test_repo_sweep_matches_committed_baseline():
+    findings = analyze_repo()
+    baseline = load_baseline(os.path.join(REPO_ROOT, DEFAULT_BASELINE))
+    new, stale = compare_to_baseline(findings, baseline)
+    assert new == [], "\n".join(f.format() for f in new)
+    assert stale == [], str(stale)
+    # every accepted suppression in the tree carries a reason (no R000)
+    assert [f for f in findings if f.rule == "R000"] == []
+
+
+def test_analysis_package_imports_without_jax_or_numpy():
+    """The CI analysis/docs-check jobs run in the bare lint image."""
+    code = (
+        "import sys; import repro.analysis; "
+        "bad = [m for m in ('jax', 'numpy') if m in sys.modules]; "
+        "assert not bad, bad"
+    )
+    env = {**os.environ, "PYTHONPATH": os.path.join(REPO_ROOT, "src")}
+    subprocess.run([sys.executable, "-c", code], check=True, env=env)
