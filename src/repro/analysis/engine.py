@@ -119,6 +119,7 @@ class AnalysisContext:
 
     root: str = REPO_ROOT
     _design_sections: set[int] | None = None
+    _tests_text: str | None = None
 
     def design_sections(self) -> set[int]:
         """Section numbers with a real ``## §N`` header in DESIGN.md."""
@@ -131,6 +132,28 @@ class AnalysisContext:
                 text = ""
             self._design_sections = {int(n) for n in DESIGN_HDR.findall(text)}
         return self._design_sections
+
+    def tests_text(self) -> str:
+        """Concatenated source of every ``tests/**/*.py`` file.
+
+        The registry R008 greps for kernel-function names: a Pallas
+        kernel whose public entry is never exercised from ``tests/``
+        has no interpret-mode parity gate. Fixture corpora under
+        :data:`EXCLUDE_DIRS` do not count as coverage.
+        """
+        if self._tests_text is None:
+            chunks = []
+            for dirpath, dirnames, filenames in os.walk(os.path.join(self.root, "tests")):
+                dirnames[:] = [d for d in dirnames if d not in EXCLUDE_DIRS]
+                for fn in sorted(filenames):
+                    if fn.endswith(".py"):
+                        try:
+                            with open(os.path.join(dirpath, fn), errors="replace") as f:
+                                chunks.append(f.read())
+                        except OSError:
+                            pass
+            self._tests_text = "\n".join(chunks)
+        return self._tests_text
 
 
 # ---------------------------------------------------------------------------

@@ -1,4 +1,4 @@
-"""The repo-specific rules (R001–R007; DESIGN.md §13).
+"""The repo-specific rules (R001–R008; DESIGN.md §13).
 
 Each rule encodes one invariant DESIGN.md states in prose and one PR
 fixed by hand; the positive/negative fixtures live under
@@ -555,4 +555,60 @@ class SectionRefRule(Rule):
                     if int(n) not in have:
                         msg = f"references DESIGN.md §{n}, which has no ## §-header"
                         out.append((lineno, m.start(), msg))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# R008 — Pallas kernel without an interpret-mode parity test
+# ---------------------------------------------------------------------------
+@register_rule
+class PallasParityRule(Rule):
+    """Every ``pl.pallas_call`` in this repo is written against TPU
+    BlockSpecs but validated on CPU in interpret mode (this container
+    has no TPU) — the interpret-parity test IS the kernel's correctness
+    gate. A kernel whose enclosing entry point is never mentioned in
+    ``tests/`` ships unverified: a decode or accumulation bug would
+    surface only as wrong numbers on real hardware. The check is
+    textual on purpose (the same contract ISSUE 10 states): the
+    function name wrapping the ``pallas_call`` must appear somewhere
+    under ``tests/`` (fixture corpora excluded)."""
+
+    rule_id = "R008"
+    title = "pl.pallas_call site without a registered interpret-mode parity test"
+
+    def applies(self, relpath: str) -> bool:
+        return is_scanned_python(relpath)
+
+    @staticmethod
+    def _enclosing_function(tree: ast.Module, node: ast.AST) -> str | None:
+        """Name of the top-level def whose span contains ``node``."""
+        for top in tree.body:
+            if isinstance(top, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                if top.lineno <= node.lineno <= (top.end_lineno or top.lineno):
+                    return top.name
+        return None
+
+    def check_tree(self, ctx, relpath, text, tree):
+        out = []
+        tests = ctx.tests_text()
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            chain = _attr_chain(node.func)
+            if not chain or chain[-1] != "pallas_call":
+                continue
+            fn = self._enclosing_function(tree, node)
+            if fn is None:
+                msg = (
+                    "pl.pallas_call outside a top-level function — no named "
+                    "entry point a parity test could register against"
+                )
+                out.append(_at(node, msg))
+            elif fn not in tests:
+                msg = (
+                    f"kernel entry {fn!r} wraps a pl.pallas_call but never "
+                    "appears in tests/ — add an interpret-mode parity test "
+                    "against kernels/ref.py (DESIGN.md §13 contract)"
+                )
+                out.append(_at(node, msg))
         return out

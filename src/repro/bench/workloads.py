@@ -105,6 +105,31 @@ def fc_layer_shapes(spec) -> list[tuple[int, int, int]]:
 # ---------------------------------------------------------------------------
 # kernels suite
 # ---------------------------------------------------------------------------
+def _selected_impl(m, k, n, fmt_name, nibble, miss: str | None = None) -> str:
+    """The impl ``impl="auto"`` resolves to for a shape (cache winner, or
+    the fallback on a miss) — recorded next to the ``selected`` timing
+    so an autotune flip is visible in the bench entry instead of
+    masquerading as a wall-clock change. ``miss`` overrides the matmul
+    backend heuristic (the conv path falls back to ``"xla"``)."""
+    from repro.bench import autotune
+
+    sel, _ = autotune.lookup_impl(m, k, n, fmt_name=fmt_name, nibble=nibble)
+    return sel or miss or ("pallas" if jax.default_backend() == "tpu" else "xla")
+
+
+def _time_selected(fn, m, k, n, fmt_name, nibble, iters, warmup, miss: str | None = None):
+    """``{"selected": timing + {"impl": name}}`` for the auto-dispatch path.
+
+    Skipped (``None``) only when auto resolves to an interpret-mode
+    Pallas grid too large to time on CPU — mirroring the bare ``pallas``
+    key's policy."""
+    sel = _selected_impl(m, k, n, fmt_name, nibble, miss=miss)
+    if sel == "pallas" and not _measure_pallas_cpu(m, k, n):
+        return None
+    t = harness.time_fn(fn, iters=iters, warmup=warmup).to_json()
+    return {**t, "impl": sel}
+
+
 def _run_matmul(m, k, n, fmt_name, nibble, iters, warmup):
     from repro.core.elp_bsd import PRESET_FORMATS
     from repro.kernels.ops import pack_weight, quantized_matmul
@@ -122,6 +147,8 @@ def _run_matmul(m, k, n, fmt_name, nibble, iters, warmup):
         wall["pallas"] = harness.time_fn(pallas_fn, iters=iters, warmup=warmup).to_json()
     else:
         wall["pallas"] = None
+    auto_fn = lambda: quantized_matmul(x, pw, impl="auto", block_sizes="auto")  # noqa: E731
+    wall["selected"] = _time_selected(auto_fn, m, k, n, fmt_name, nibble, iters, warmup)
 
     bf16_bytes = k * n * 2
     return {
@@ -130,6 +157,69 @@ def _run_matmul(m, k, n, fmt_name, nibble, iters, warmup):
         "wall_us": wall,
         "hlo": harness.hlo_cost(lambda a, p: quantized_matmul(a, p, impl="xla"), x, pw),
         "quality": {"out_mse": harness.output_mse(quantized_matmul(x, pw, impl="xla"), x @ w)},
+        "bytes": {
+            "weight_bytes": pw.nbytes + pw.sf.size * 4,
+            "bf16_bytes": bf16_bytes,
+            "hbm_weight_ratio": round(bf16_bytes / pw.nbytes, 3),
+        },
+    }
+
+
+def _run_decode_step_fused(m, k, n, fmt_name, nibble, iters, warmup):
+    """Decode-step GEMM: dequantize-then-matmul vs the fused datapath.
+
+    ``dequant`` is the two-pass baseline (``impl="xla"``: select-chain
+    decode to a float weight tensor, then dot); ``fused`` is
+    ``impl="pallas_fused"`` — the shift-add single-pass form on CPU, the
+    fused Pallas kernel on TPU; ``pallas`` times the fused kernel itself
+    (interpret mode on CPU); ``selected`` is the auto dispatch. Quality
+    records parity deltas, not speedups (the determinism contract: only
+    wall-clock may vary between runs) — ``fused_max_abs_diff`` must be
+    exactly 0.0 off-TPU, where both impls decode bit-identically.
+    """
+    from repro.core.elp_bsd import PRESET_FORMATS
+    from repro.kernels.ops import pack_weight, quantized_matmul
+
+    fmt = PRESET_FORMATS[fmt_name]
+    rng = np.random.default_rng(13)
+    x = jnp.asarray(rng.normal(size=(m, k)), F32)
+    w = jnp.asarray(rng.normal(size=(k, n)) * 0.02, F32)
+    pw, _ = pack_weight(w, fmt, compensate=True, nibble=nibble)
+
+    dequant_fn = lambda: quantized_matmul(x, pw, impl="xla")  # noqa: E731
+    fused_fn = lambda: quantized_matmul(x, pw, impl="pallas_fused")  # noqa: E731
+    wall = {
+        "dequant": harness.time_fn(dequant_fn, iters=iters, warmup=warmup).to_json(),
+        "fused": harness.time_fn(fused_fn, iters=iters, warmup=warmup).to_json(),
+    }
+    if _measure_pallas_cpu(1, k, n):  # fused kernel grid: M rides whole
+        kernel_fn = lambda: quantized_matmul(  # noqa: E731
+            x, pw, impl="pallas_fused", interpret=True
+        )
+        wall["pallas"] = harness.time_fn(kernel_fn, iters=iters, warmup=warmup).to_json()
+    else:
+        wall["pallas"] = None
+    auto_fn = lambda: quantized_matmul(x, pw, impl="auto", block_sizes="auto")  # noqa: E731
+    wall["selected"] = _time_selected(auto_fn, m, k, n, fmt_name, pw.nibble, iters, warmup)
+
+    ref = np.asarray(dequant_fn())
+    fused_diff = float(np.max(np.abs(np.asarray(fused_fn()) - ref)))
+    if wall["pallas"] is not None:
+        kernel_out = np.asarray(quantized_matmul(x, pw, impl="pallas_fused", interpret=True))
+        kernel_diff = float(np.max(np.abs(kernel_out - ref)))
+    else:
+        kernel_diff = 0.0
+    bf16_bytes = k * n * 2
+    return {
+        "workload": "decode_step_fused",
+        "shape": {"m": m, "k": k, "n": n, "fmt": fmt_name, "nibble": int(pw.nibble)},
+        "wall_us": wall,
+        "hlo": harness.hlo_cost(lambda a, p: quantized_matmul(a, p, impl="pallas_fused"), x, pw),
+        "quality": {
+            "fused_max_abs_diff": fused_diff,
+            "kernel_max_abs_diff": kernel_diff,
+            "out_mse": harness.output_mse(dequant_fn(), x @ w),
+        },
         "bytes": {
             "weight_bytes": pw.nbytes + pw.sf.size * 4,
             "bf16_bytes": bf16_bytes,
@@ -160,6 +250,10 @@ def _run_conv2d(net, idx, layer_k, stride, batch, hw, cin, cout, fmt_name, iters
         wall["pallas"] = harness.time_fn(pallas_fn, iters=iters, warmup=warmup).to_json()
     else:
         wall["pallas"] = None
+    auto_fn = lambda: quantized_conv2d(x, pw, stride=stride, impl="auto")  # noqa: E731
+    wall["selected"] = _time_selected(
+        auto_fn, m_im2col, kdim, cout, fmt_name, pw.nibble, iters, warmup, miss="xla"
+    )
 
     ref = jax.lax.conv_general_dilated(
         x, w, (stride, stride), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
@@ -217,6 +311,22 @@ def _register_kernel_suite() -> None:
                     autotune_shape=(m, k, n, fmt_name, nibble),
                 )
             )
+
+    # Fused decode-step GEMMs: the serve hot path (tiny M, full K·N),
+    # dequant-vs-fused head to head. Smoke tier — the ≥1.15x fused
+    # speedup is a gated acceptance number on CPU hosts too.
+    for fmt_name, nibble in (("elp_bsd_a4", True), ("elp_bsd_a4", False), ("elp_bsd_c6", False)):
+        mode = "nib" if nibble else "u8"
+        register(
+            WorkloadSpec(
+                name=f"decode_step_fused/{fmt_name}/{mode}/4x2048x2048",
+                suite="kernels",
+                tier="smoke",
+                run=functools.partial(_run_decode_step_fused, 4, 2048, 2048, fmt_name, nibble),
+                tags=("decode_step_fused", "matmul", fmt_name),
+                autotune_shape=(4, 2048, 2048, fmt_name, nibble),
+            )
+        )
 
     # Packed convs: every conv layer of both mini nets, FORMAT_A nibble
     # (the paper's 4-bit story), smoke at batch 2, full at batch 32.

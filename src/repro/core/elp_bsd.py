@@ -180,6 +180,53 @@ class ElpBsdFormat:
             tabs.append(t)
         return tabs
 
+    def shift_add_decomposition(self) -> list[tuple[int, int, int, np.ndarray, tuple[int, int] | None]]:
+        """Per digit: ``(offset, sign_bits, index_bits, shift_lut, affine)``.
+
+        The shift-add view of the level table (Sec. IV's MAC datapath):
+        a code's value is ``Σ_d sign_d · 2^{shift_d}``, where each
+        digit's shift comes from ``shift_lut[index field]``. ``affine``
+        is ``(a, b)`` when the LUT is an arithmetic progression
+        ``shift = a + b·index`` — every Table II digit except the
+        {0,2,5,7} / {1,2,4,5} sets — letting decoders compute the shift
+        with one multiply-add instead of a select chain. This is the
+        single source the kernels consume; the field extraction itself
+        is pinned by :func:`decode_codes`.
+        """
+        out = []
+        for (off, sbits, ibits), tab in zip(self.field_layout(), self.shift_tables()):
+            tabl = [int(t) for t in tab]
+            if len(tabl) == 1:
+                affine: tuple[int, int] | None = (tabl[0], 0)
+            else:
+                step = tabl[1] - tabl[0]
+                ok = all(tabl[i] == tabl[0] + i * step for i in range(len(tabl)))
+                affine = (tabl[0], step) if ok else None
+            out.append((off, sbits, ibits, tab, affine))
+        return out
+
+    def shift_add_terms(self) -> list[tuple[np.ndarray, np.ndarray]]:
+        """Per digit, ``(sign, shift)`` over every raw code: the term
+        decomposition ``code_values()[c] == Σ_d sign_d[c] · 2^{shift_d[c]}``.
+
+        This is the oracle the shift-add decoders (``kernels/ref.py``
+        ``decode_values_shift_add`` and the fused Pallas kernels) are
+        property-tested against — each term is an exactly-representable
+        signed power of two, so accumulating the terms in digit order in
+        float32 reproduces the level table bit-exactly.
+        """
+        codes = np.arange(2**self.bits_per_weight, dtype=np.int64)
+        out = []
+        for off, sbits, ibits, tab, _affine in self.shift_add_decomposition():
+            field = (codes >> off) & ((1 << (sbits + ibits)) - 1)
+            idx = field & ((1 << ibits) - 1) if ibits else np.zeros_like(field)
+            if sbits:
+                sign = np.where((field >> ibits) & 1, -1, 1).astype(np.int8)
+            else:
+                sign = np.ones(codes.shape, np.int8)
+            out.append((sign, tab[idx].astype(np.int32)))
+        return out
+
     def describe(self) -> str:
         parts = []
         for d in self.digits:

@@ -70,7 +70,7 @@ def quantized_conv2d(
     *,
     stride: int = 1,
     padding: str = "SAME",
-    impl: str = "pallas",
+    impl: str = "auto",
     block_m: int = 128,
     block_n: int = 128,
     block_k: int = 128,
@@ -81,9 +81,14 @@ def quantized_conv2d(
     """``conv2d(x[B,H,W,Cin], pw)`` → ``[B, Ho, Wo, Cout]`` on packed codes.
 
     ``pw`` must come from :func:`repro.kernels.ops.pack_conv_weight`
-    (``source_shape`` carries the conv layout). ``impl="pallas"`` runs
-    patch extraction into the fused decode+matmul kernel;
-    ``impl="xla"`` dequantizes and calls ``lax.conv_general_dilated``.
+    (``source_shape`` carries the conv layout). ``impl="pallas"`` /
+    ``"pallas_fused"`` run patch extraction into the corresponding
+    decode+matmul kernel; ``impl="xla"`` dequantizes and calls
+    ``lax.conv_general_dilated``. The default ``impl="auto"`` resolves
+    the im2col matmul shape through the autotune cache's measured
+    winner; on a cache miss it falls back to ``"xla"`` — never to an
+    unmeasured Pallas tiling (the seed's Pallas-by-default heuristic is
+    how the conv0-class 10x cliffs happened; DESIGN.md §14).
     ``block_sizes`` forwards to :func:`quantized_matmul` — a tuple, or
     ``"auto"`` to resolve the im2col matmul shape through the autotune
     cache.
@@ -92,6 +97,26 @@ def quantized_conv2d(
         raise ValueError("quantized_conv2d needs a pack_conv_weight-packed weight")
     kh, kw, _, cout = pw.source_shape
     out_dtype = out_dtype or x.dtype
+    if impl == "auto":
+        b, h, w = x.shape[0], x.shape[1], x.shape[2]
+        ho, _ = _out_size_and_pads(h, kh, stride, padding)
+        wo, _ = _out_size_and_pads(w, kw, stride, padding)
+        m0 = b * ho * wo
+        if pw.codes.ndim != 2 or jax.device_count() > 1:
+            impl = "xla"
+        else:
+            from repro.bench.autotune import lookup_impl
+
+            sel, sel_blocks = lookup_impl(
+                m0, pw.shape[0], pw.shape[1], fmt_name=pw.fmt_name, nibble=pw.nibble
+            )
+            if sel is None:
+                # Interim heuristic (no measurement for this shape): XLA.
+                impl = "xla"
+            else:
+                impl = sel
+                if block_sizes is None or block_sizes == "auto":
+                    block_sizes = tuple(sel_blocks)
     if impl == "xla":
         out = lax.conv_general_dilated(
             x.astype(F32),
@@ -101,13 +126,13 @@ def quantized_conv2d(
             dimension_numbers=("NHWC", "HWIO", "NHWC"),
         )
         return out.astype(out_dtype)
-    if impl != "pallas":
+    if impl not in ("pallas", "pallas_fused"):
         raise ValueError(f"unknown impl {impl!r}")
     patches = extract_patches(x.astype(F32), kh, kw, stride=stride, padding=padding)
     return quantized_matmul(
         patches,
         pw,
-        impl="pallas",
+        impl=impl,
         block_m=block_m,
         block_n=block_n,
         block_k=block_k,

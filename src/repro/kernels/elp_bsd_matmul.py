@@ -5,10 +5,14 @@ This is the TPU adaptation of the paper's shift-based MAC unit
 each); per (block_m, block_n, block_k) tile the kernel
 
   1. streams a code block into VMEM,
-  2. expands codes to float32 *in VMEM* — per digit: extract sign/index
-     fields, select-chain the shift-count LUT (≤ 8 compile-time
-     entries → vselects, no gather), and build ``±2^shift`` by writing
-     the float32 exponent field (the VPU analogue of the barrel shift),
+  2. expands codes to float32 *in VMEM* via shift-add decode
+     (:func:`repro.kernels.ref.decode_values_shift_add`) — per digit:
+     extract sign/index fields, map index → shift count (an affine
+     ``a + b·index`` for arithmetic-progression LUTs, a ≤ 8-entry
+     vselect chain otherwise), and build the signed ``±2^shift`` term
+     in one integer write of the float32 sign+exponent fields (the VPU
+     analogue of the barrel shift; bit-identical to the select-chain
+     decoder, DESIGN.md §14),
   3. feeds the decoded tile straight to the MXU
      (``jnp.dot(..., preferred_element_type=float32)``),
   4. accumulates in a float32 VMEM scratch across the K grid dimension.
@@ -37,7 +41,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.compat import pallas_compiler_params
 from repro.core.elp_bsd import ElpBsdFormat
-from repro.kernels.ref import decode_values, unpack_nibbles_k
+from repro.kernels.ref import decode_values_shift_add, unpack_nibbles_k
 
 Array = jax.Array
 
@@ -53,7 +57,7 @@ def _mm_kernel(x_ref, c_ref, sf_ref, o_ref, acc_ref, *, fmt: ElpBsdFormat, nibbl
     codes = c_ref[...]
     if nibble:
         codes = unpack_nibbles_k(codes)
-    w = decode_values(codes, fmt)  # [bk, bn] float32, unscaled
+    w = decode_values_shift_add(codes, fmt)  # [bk, bn] float32, unscaled
     x = x_ref[...].astype(jnp.float32)
     acc_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
 

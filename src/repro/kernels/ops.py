@@ -36,6 +36,7 @@ from repro.core.convert import convert_tensor, nibble_pack
 from repro.core.elp_bsd import ElpBsdFormat, PRESET_FORMATS
 from repro.kernels import ref as kref
 from repro.kernels.elp_bsd_matmul import elp_bsd_matmul
+from repro.kernels.fused_decode import fused_decode_matmul
 
 Array = jax.Array
 F32 = jnp.float32
@@ -238,6 +239,15 @@ def dequantize(pw: PackedWeight) -> Array:
     return w[..., : pw.shape[0], : pw.shape[1]]
 
 
+def dequantize_shift_add(pw: PackedWeight) -> Array:
+    """Decode via the shift-add decomposition — bit-identical to
+    :func:`dequantize`, fewer vector ops (single-pass XLA form of the
+    fused kernel datapath, DESIGN.md §14)."""
+    codes = kref.unpack_nibbles_k(pw.codes) if pw.nibble else pw.codes
+    w = kref.decode_values_shift_add(codes, pw.fmt) * pw.sf
+    return w[..., : pw.shape[0], : pw.shape[1]]
+
+
 def dequantize_nd(pw: PackedWeight) -> Array:
     """Decode to the source layout (conv ``[kh, kw, cin, cout]``, etc.)."""
     w = dequantize(pw)
@@ -257,6 +267,28 @@ def dequantize_tree(tree):
         tree,
         is_leaf=lambda l: isinstance(l, PackedWeight),
     )
+
+
+def _resolve_auto_impl(m0: int, k: int, n: int, pw: PackedWeight, block_sizes):
+    """Trace-time resolution of ``impl="auto"`` to a concrete impl.
+
+    Stacked weights and multi-device layouts always take the XLA path
+    (the Pallas kernels are single-[K,N], single-device). Otherwise the
+    autotune cache's measured winner decides; a miss falls back to the
+    old backend heuristic (Pallas on TPU, XLA elsewhere). When the
+    caller left blocks to "auto"/default, the winner's tuned blocks ride
+    along — that is the exact configuration the cache timed.
+    """
+    if pw.codes.ndim != 2 or jax.device_count() > 1:
+        return "xla", block_sizes
+    from repro.bench.autotune import lookup_impl
+
+    sel, sel_blocks = lookup_impl(m0, k, n, fmt_name=pw.fmt_name, nibble=pw.nibble)
+    if sel is None:
+        return ("pallas" if jax.default_backend() == "tpu" else "xla"), block_sizes
+    if block_sizes is None or block_sizes == "auto":
+        return sel, tuple(sel_blocks)
+    return sel, block_sizes
 
 
 def _pad_to(x: Array, axis: int, mult: int) -> Array:
@@ -299,12 +331,21 @@ def quantized_matmul(
     against that compile-time constant first — the serve path's
     zero-reduction activation quantization.
 
+    ``impl`` picks the datapath: ``"pallas"`` (tiled decode+matmul
+    kernel), ``"pallas_fused"`` (decode-step kernel — shift-add decode,
+    whole-M strip; lowers to the single-pass XLA shift-add form on
+    non-TPU backends, bit-identical to ``"xla"``), ``"xla"``
+    (dequantize-then-matmul fallback), or ``"auto"`` to resolve the
+    shape through the autotune cache's measured winner
+    (:func:`repro.bench.autotune.lookup_impl`; a miss falls back to
+    Pallas-on-TPU/XLA-elsewhere).
+
     ``block_sizes`` overrides the individual ``block_*`` args: a
     ``(block_m, block_n, block_k)`` tuple, or ``"auto"`` to resolve the
     shape through the persistent autotune cache
     (:mod:`repro.bench.autotune`; falls back to the defaults on a cache
-    miss). Shapes are static under jit, so the lookup happens at trace
-    time and costs nothing per call.
+    miss). Shapes are static under jit, so impl and block lookups happen
+    at trace time and cost nothing per call.
     """
     if pw.act_scale is not None:
         from repro.core.quantize import fake_quant_uniform
@@ -315,6 +356,8 @@ def quantized_matmul(
     x2 = x.reshape(-1, x.shape[-1])
     m0 = x2.shape[0]
     out_dtype = out_dtype or x.dtype
+    if impl == "auto":
+        impl, block_sizes = _resolve_auto_impl(m0, k, n, pw, block_sizes)
     # Resolve and validate block_sizes for every impl (the xla path
     # ignores blocks, but a typo'd value or an odd nibble block_k must
     # not succeed there and only blow up later on the TPU path).
@@ -323,7 +366,12 @@ def quantized_matmul(
             from repro.bench.autotune import lookup_blocks
 
             block_m, block_n, block_k = lookup_blocks(
-                m0, k, n, fmt_name=pw.fmt_name, nibble=pw.nibble
+                m0,
+                k,
+                n,
+                fmt_name=pw.fmt_name,
+                nibble=pw.nibble,
+                impl=impl if impl in ("pallas", "pallas_fused") else "pallas",
             )
         elif isinstance(block_sizes, tuple) and len(block_sizes) == 3:
             block_m, block_n, block_k = block_sizes
@@ -341,6 +389,42 @@ def quantized_matmul(
         out = jnp.dot(
             x2.astype(jnp.float32), dequantize(pw), preferred_element_type=jnp.float32
         ).astype(out_dtype)
+        return out.reshape(*lead, n)
+    if impl == "pallas_fused":
+        if pw.codes.ndim != 2:
+            raise ValueError(
+                "pallas_fused path takes a single [K, N] weight; use impl='xla' for stacks"
+            )
+        if interpret is not True and jax.default_backend() != "tpu":
+            # Single-pass XLA form of the same datapath: shift-add decode
+            # feeding one dot, no select-chain/sign-multiply intermediates.
+            # Bit-identical to impl="xla" (the decoders agree bit-for-bit)
+            # and measurably faster on CPU decode GEMMs (DESIGN.md §14).
+            out = jnp.dot(
+                x2.astype(jnp.float32),
+                dequantize_shift_add(pw),
+                preferred_element_type=jnp.float32,
+            ).astype(out_dtype)
+            return out.reshape(*lead, n)
+        x2 = _pad_to(x2, 1, block_k)
+        krow = block_k // 2 if pw.nibble else block_k
+        codes = _pad_to(_pad_to(pw.codes, 0, krow), 1, block_n)
+        per_channel = pw.sf.size > 1
+        sf_kernel = jnp.ones((), jnp.float32) if per_channel else pw.sf
+        out = fused_decode_matmul(
+            x2,
+            codes,
+            sf_kernel,
+            pw.fmt,
+            nibble=pw.nibble,
+            block_n=block_n,
+            block_k=block_k,
+            out_dtype=jnp.float32 if per_channel else out_dtype,
+            interpret=interpret,
+        )
+        out = out[:, :n]
+        if per_channel:
+            out = (out * pw.sf.reshape(1, n)).astype(out_dtype)
         return out.reshape(*lead, n)
     if impl != "pallas":
         raise ValueError(f"unknown impl {impl!r}")

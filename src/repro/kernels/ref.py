@@ -46,6 +46,45 @@ def decode_values(codes: Array, fmt: ElpBsdFormat) -> Array:
     return out
 
 
+def decode_values_shift_add(codes: Array, fmt: ElpBsdFormat) -> Array:
+    """Shift-add decode: bit-identical to :func:`decode_values`, fewer ops.
+
+    Per digit the signed power-of-two term ``±2^shift`` is built in ONE
+    integer construction — the shift count goes into the float32
+    exponent field and the digit's sign bit is OR'd straight into the
+    float sign bit — instead of a shift LUT select chain followed by a
+    float sign multiply. Digits whose shift LUT is an arithmetic
+    progression (``affine`` in
+    :meth:`~repro.core.elp_bsd.ElpBsdFormat.shift_add_decomposition`)
+    skip the select chain entirely: ``shift = a + b·index``.
+
+    Bit-exactness (property-tested in ``tests/test_fused_decode.py``):
+    the shift integers are equal by construction, ``sign<<31 | exp``
+    is the bit pattern of ``sign * 2^shift`` exactly, and summing the
+    ≤ 2 exact power-of-two terms in digit order rounds identically to
+    :func:`decode_values`'s ``0 + t₀ + t₁`` chain. This is the decoder
+    the fused kernels and the single-pass XLA path consume.
+    """
+    codes = codes.astype(jnp.int32)
+    out = None
+    for off, sbits, ibits, tab, affine in fmt.shift_add_decomposition():
+        field = (codes >> off) & ((1 << (sbits + ibits)) - 1)
+        idx = field & ((1 << ibits) - 1)
+        if affine is not None:
+            a, b = affine
+            shift = a + idx * b if b else jnp.full(codes.shape, a, jnp.int32)
+        else:
+            shift = jnp.full(codes.shape, int(tab[0]), dtype=jnp.int32)
+            for e in range(1, len(tab)):
+                shift = jnp.where(idx == e, int(tab[e]), shift)
+        bits = (shift + 127) << 23
+        if sbits:
+            bits = bits | (((field >> ibits) & 1) << 31)
+        term = jax.lax.bitcast_convert_type(bits, jnp.float32)
+        out = term if out is None else out + term
+    return out
+
+
 def unpack_nibbles_k(packed: Array) -> Array:
     """Unpack ``[..., K//2, N] uint8`` (two 4-bit codes along K per byte)
     to ``[..., K, N]``. Row ``2r`` is the low nibble, ``2r+1`` the high."""

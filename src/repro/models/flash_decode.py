@@ -41,17 +41,37 @@ Array = jax.Array
 F32 = jnp.float32
 
 
-def _local_attn(q, k, v, ks, vs, pos, *, axis: str, window: int, n_rep: int):
+def _chunk_stats(qf, kf, vf, kpos, qpos, *, window: int):
+    """Softmax stats (m, l, acc) of ``qf`` against one key/value chunk."""
+    logits = jnp.einsum("bqhd,bshd->bhqs", qf, kf)  # [B,H,sq,s_chunk]
+    mask = kpos.reshape((1, 1, 1, -1)) <= qpos  # [B|1,1,sq,s_chunk], broadcasts over H
+    if window:
+        mask &= (qpos - kpos.reshape((1, 1, 1, -1))) < window
+    logits = jnp.where(mask, logits, -1e30)
+    m = jnp.max(logits, axis=-1)  # [B,H,sq]
+    p = jnp.exp(logits - m[..., None])
+    l = jnp.sum(p, axis=-1)  # [B,H,sq]
+    acc = jnp.einsum("bhqs,bshd->bhqd", p, vf)  # [B,H,sq,hd]
+    return m, l, acc
+
+
+def _local_attn(
+    q, k, v, ks, vs, pos, *, axis: str, window: int, n_rep: int, block_s: int | None = None
+):
     """Per-shard body. q[B,sq,H,hd]; k/v[B,s_loc,KV,hd] = this shard's
     slice (optionally int8 with per-token-head scales ks/vs). ``pos`` is
     a scalar (lockstep batch) or a per-row ``[B]`` vector (continuous
     batching: each slot masked to its own depth). ``sq > 1`` is the
     speculative verify run: query ``i`` of row ``b`` sits at position
-    ``pos[b] + i`` and is masked causally within the run."""
+    ``pos[b] + i`` and is masked causally within the run.
+
+    ``block_s`` streams the shard-local slice through the softmax-stats
+    combine in seq chunks (the tuned flash-decode block size); ``None``
+    is the one-shot slice — the untuned default, byte-identical to the
+    pre-autotune behavior."""
     b, sq, h, hd = q.shape
     s_loc = k.shape[1]
     idx = jax.lax.axis_index(axis)
-    kpos = idx * s_loc + jnp.arange(s_loc)
     # query positions: [B|1, 1, sq, 1], broadcasting against kpos below
     qpos = pos.reshape((-1, 1, 1, 1)) + jnp.arange(sq).reshape((1, 1, sq, 1))
 
@@ -60,16 +80,24 @@ def _local_attn(q, k, v, ks, vs, pos, *, axis: str, window: int, n_rep: int):
     kf = jnp.repeat(kf, n_rep, axis=2)  # [B,s,H,hd]
     vf = jnp.repeat(vf, n_rep, axis=2)
     qf = q.astype(F32) * (1.0 / math.sqrt(hd))
-    logits = jnp.einsum("bqhd,bshd->bhqs", qf, kf)  # [B,H,sq,s_loc]
-    mask = kpos.reshape((1, 1, 1, -1)) <= qpos  # [B|1,1,sq,s_loc], broadcasts over H
-    if window:
-        mask &= (qpos - kpos.reshape((1, 1, 1, -1))) < window
-    logits = jnp.where(mask, logits, -1e30)
-
-    m = jnp.max(logits, axis=-1)  # [B,H,sq]
-    p = jnp.exp(logits - m[..., None])
-    l = jnp.sum(p, axis=-1)  # [B,H,sq]
-    acc = jnp.einsum("bhqs,bshd->bhqd", p, vf)  # [B,H,sq,hd]
+    if block_s is None or block_s >= s_loc or s_loc % block_s:
+        kpos = idx * s_loc + jnp.arange(s_loc)
+        m, l, acc = _chunk_stats(qf, kf, vf, kpos, qpos, window=window)
+    else:
+        # Streaming combine over seq chunks — same running-max rescale
+        # as the cross-shard combine below, applied chunk-by-chunk.
+        m = jnp.full((b, h, sq), -jnp.inf, F32)
+        l = jnp.zeros((b, h, sq), F32)
+        acc = jnp.zeros((b, h, sq, hd), F32)
+        for c in range(s_loc // block_s):
+            sl = slice(c * block_s, (c + 1) * block_s)
+            kpos = idx * s_loc + c * block_s + jnp.arange(block_s)
+            mc, lc, ac = _chunk_stats(qf, kf[:, sl], vf[:, sl], kpos, qpos, window=window)
+            mn = jnp.maximum(m, mc)
+            cr, crc = jnp.exp(m - mn), jnp.exp(mc - mn)
+            m = mn
+            l = l * cr + lc * crc
+            acc = acc * cr[..., None] + ac * crc[..., None]
 
     # combine softmax stats across seq shards — the ONLY collective
     mg = jax.lax.pmax(m, axis)
@@ -90,15 +118,27 @@ def flash_decode_attention(
     window: int = 0,
     ks: Array | None = None,
     vs: Array | None = None,
+    block_s: int | None = None,
 ) -> Array:
     """q[B,1,H,hd] against cache ck/cv[B,S,KV,hd] seq-sharded over model.
 
     ``ks``/``vs`` are per-(token, head) scales for an int8 cache
-    (dequantized per shard, inside the map — HBM moves int8)."""
+    (dequantized per shard, inside the map — HBM moves int8).
+
+    ``block_s`` chunks each shard's seq slice through a streaming
+    softmax combine; the default ``None`` consults the autotune cache
+    (``flash_decode`` entries, :func:`repro.bench.autotune.
+    lookup_flash_block_s`) and falls back to the one-shot slice on a
+    miss — shapes are static under jit, so the lookup happens at trace
+    time."""
     axis = pctx.model_axis
     h = q.shape[2]
     kv = ck.shape[2]
     n_rep = h // kv
+    if block_s is None:
+        from repro.bench.autotune import lookup_flash_block_s
+
+        block_s = lookup_flash_block_s(q.shape[0], h, q.shape[3], ck.shape[1])
     ba = pctx.batch_axes
     b = q.shape[0]
     import numpy as np
@@ -112,7 +152,7 @@ def flash_decode_attention(
     # replicated
     pspec = P(bspec) if pos.ndim == 1 else P()
     if ks is not None:
-        fn = partial(_local_attn, axis=axis, window=window, n_rep=n_rep)
+        fn = partial(_local_attn, axis=axis, window=window, n_rep=n_rep, block_s=block_s)
         mapped = shard_map(
             fn,
             mesh=pctx.mesh,
@@ -123,7 +163,10 @@ def flash_decode_attention(
         return mapped(q, ck, cv, ks, vs, pos)
 
     def fn4(q_, k_, v_, pos_):
-        return _local_attn(q_, k_, v_, None, None, pos_, axis=axis, window=window, n_rep=n_rep)
+        return _local_attn(
+            q_, k_, v_, None, None, pos_,
+            axis=axis, window=window, n_rep=n_rep, block_s=block_s,
+        )
 
     mapped = shard_map(
         fn4,

@@ -233,24 +233,18 @@ def matmul(x: Array, w) -> Array:
     """x[..., in] @ w[in, out] with f32 accumulation, output in x.dtype.
 
     ``w`` may be a packed ELP_BSD weight (serving path): the codes are
-    decoded in-graph — on a single-device TPU via the fused Pallas
-    kernel with autotuned block sizes (``block_sizes="auto"``, resolved
-    through the persistent cache at trace time), under pjit / on CPU
-    via the XLA dequant path. Either way HBM moves only the code bytes.
+    decoded in-graph via ``impl="auto"`` — the autotune cache's measured
+    winner per (shape, layout, backend) picks between the tiled Pallas
+    kernel, the fused decode-step kernel, and the XLA dequant path, with
+    tuned block sizes resolved at trace time. Stacked (scan-layer)
+    weights and multi-device meshes always stay on the XLA path (pjit
+    must keep the decode in XLA so it partitions with the shards).
+    Either way HBM moves only the code bytes.
     """
     from repro.kernels.ops import PackedWeight, quantized_matmul
 
     if isinstance(w, PackedWeight):
-        # The pallas kernel takes a single [K, N] weight on one device;
-        # stacked (scan-layer) weights, multi-device meshes (pjit must
-        # keep the decode in XLA so it partitions with the shards), and
-        # non-TPU backends use the XLA dequant path.
-        impl = (
-            "pallas"
-            if jax.default_backend() == "tpu" and w.codes.ndim == 2 and jax.device_count() == 1
-            else "xla"
-        )
-        return quantized_matmul(x, w, impl=impl, block_sizes="auto", out_dtype=x.dtype)
+        return quantized_matmul(x, w, impl="auto", block_sizes="auto", out_dtype=x.dtype)
     return jnp.dot(x, w.astype(x.dtype), preferred_element_type=F32).astype(x.dtype)
 
 

@@ -1292,6 +1292,7 @@ class ServeEngine:
             "n_slots": self._sched.n_slots,
             "mesh": dict(self.mesh.shape) if self.mesh is not None else None,
             "energy_nj_per_token": self.energy["total_nj"],
+            "kernel_dispatch": self.kernel_dispatch(),
             "straggler": self.monitor.report(),
         }
         if self.metrics.enabled:
@@ -1325,6 +1326,47 @@ class ServeEngine:
                 "acceptance_rate": rate,
             }
         return st
+
+    def kernel_dispatch(self) -> dict:
+        """Which matmul impl each packed decode GEMM resolves to.
+
+        Walks the packed weight tree and resolves every distinct
+        ``[K, N]`` decode-step GEMM (``M`` = the slot batch) exactly the
+        way ``layers.matmul(impl="auto")`` does at trace time: the
+        autotune cache's measured winner, or the backend heuristic on a
+        miss. Observability for "is the fused decode kernel actually
+        on?" — keyed ``MxKxN|fmt|layout``, each value recording the
+        impl, how it was chosen (``autotuned`` / ``heuristic`` /
+        ``structural``), and how many weights share the shape.
+        """
+        from repro.bench.autotune import lookup_impl
+        from repro.kernels.ops import PackedWeight
+
+        backend = jax.default_backend()
+        multi = jax.device_count() > 1
+        m = self._sched.n_slots
+        out: dict[str, dict] = {}
+        for leaf in jax.tree.leaves(
+            self.params, is_leaf=lambda l: isinstance(l, PackedWeight)
+        ):
+            if not isinstance(leaf, PackedWeight):
+                continue
+            k, n = leaf.shape
+            key = f"{m}x{k}x{n}|{leaf.fmt_name}|{'nib' if leaf.nibble else 'u8'}"
+            if key in out:
+                out[key]["count"] += 1
+                continue
+            if leaf.codes.ndim != 2 or multi:
+                impl, source = "xla", "structural"
+            else:
+                sel, _ = lookup_impl(m, k, n, fmt_name=leaf.fmt_name, nibble=leaf.nibble)
+                if sel is None:
+                    impl = "pallas" if backend == "tpu" else "xla"
+                    source = "heuristic"
+                else:
+                    impl, source = sel, "autotuned"
+            out[key] = {"impl": impl, "source": source, "count": 1}
+        return out
 
     def decode_cost(self) -> dict:
         """HLO cost (FLOPs / bytes / collectives) of the compiled greedy

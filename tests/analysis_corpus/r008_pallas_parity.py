@@ -1,0 +1,29 @@
+"""R008 fixture: pallas_call sites with and without a parity test.
+
+``elp_bsd_matmul`` is the covered shape — that name appears all over
+``tests/test_kernels.py``. The uncovered shape uses a name that exists
+nowhere under ``tests/`` (this corpus directory is excluded from the
+registry scan, so spelling it here does not register coverage).
+"""
+import functools
+
+import jax
+from jax.experimental import pallas as pl
+
+
+def _kernel_body(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def elp_bsd_matmul(x):  # covered: named throughout tests/test_kernels.py
+    return pl.pallas_call(_kernel_body, out_shape=x)(x)
+
+
+def unverified_decode_kernel(x):  # uncovered: no test mentions this name
+    return pl.pallas_call(
+        functools.partial(_kernel_body),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)
+
+
+_ANON = pl.pallas_call(_kernel_body, out_shape=None)  # module level: no entry point

@@ -51,7 +51,7 @@ def rule_findings(findings, rule):
 
 # -- registry ---------------------------------------------------------------
 def test_all_rules_registered():
-    assert set(RULES) == {f"R{n:03d}" for n in range(1, 8)}
+    assert set(RULES) == {f"R{n:03d}" for n in range(1, 9)}
 
 
 # -- R001: the motivating races, verbatim -----------------------------------
@@ -147,6 +147,30 @@ def test_r007_section_refs():
     fs = rule_findings(run_fixture("r007_refs.md", "notes.md"), "R007")
     assert len(fs) == 1
     assert "§77" in fs[0].message
+
+
+# -- R008 -------------------------------------------------------------------
+def test_r008_pallas_parity_coverage():
+    """Kernel entry points named in tests/ pass; unnamed ones are flagged.
+
+    The uncovered name is assembled by concatenation so spelling it in
+    this test does not itself register coverage (tests_text scans the
+    real tests/ tree, corpus excluded)."""
+    fs = rule_findings(
+        run_fixture("r008_pallas_parity.py", "src/repro/kernels/x.py"), "R008"
+    )
+    uncovered = "unverified_" + "decode_kernel"
+    assert len(fs) == 2
+    assert any(uncovered in f.message for f in fs)
+    assert any("outside a top-level function" in f.message for f in fs)
+    assert not any("elp_bsd_matmul" in f.message for f in fs)  # covered name passes
+
+
+def test_r008_skips_non_scanned_paths():
+    with open(os.path.join(CORPUS, "r008_pallas_parity.py")) as f:
+        text = f.read()
+    fs = analyze_source("tests/analysis_corpus/x.py", text, AnalysisContext())
+    assert not rule_findings(fs, "R008")
 
 
 # -- suppressions -----------------------------------------------------------

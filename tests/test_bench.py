@@ -113,11 +113,24 @@ class TestAutotuneCache:
 
     def test_sweep_nibble_tunes_both_storage_modes(self, tmp_cache):
         results = autotune.sweep_nibble(8, 64, 32, FORMAT_A, iters=1, warmup=1)
-        keys = {r["key"] for r in results}
-        assert keys == {
-            autotune.cache_key(8, 64, 32, "elp_bsd_a4", False, jax.default_backend()),
-            autotune.cache_key(8, 64, 32, "elp_bsd_a4", True, jax.default_backend()),
+        # The returned key is the cross-impl winner's; each result covers
+        # one storage mode, and every raced impl lands its own entry.
+        assert {r["key"] for r in results} == {
+            autotune.cache_key(
+                8, 64, 32, "elp_bsd_a4", nib, jax.default_backend(), impl=r["impl"]
+            )
+            for r, nib in zip(results, (False, True))
         }
+        autotune.invalidate_memory_cache()
+        entries = autotune.cache_entries()
+        for nib in (False, True):
+            for impl in autotune.IMPLS:
+                assert (
+                    autotune.cache_key(
+                        8, 64, 32, "elp_bsd_a4", nib, jax.default_backend(), impl=impl
+                    )
+                    in entries
+                )
 
     def test_autotune_rejects_foreign_backend(self):
         other = "tpu" if jax.default_backend() != "tpu" else "cpu"
@@ -131,6 +144,86 @@ class TestAutotuneCache:
         free = autotune.candidate_blocks(512, 2048, 512, nibble=True, bit_stable=False)
         assert {bk for _, _, bk in free} > {128}
         assert all(bk % 2 == 0 for _, _, bk in free)
+
+
+# ---------------------------------------------------------------------------
+# Schema v2: impl-qualified keys, v1 migration, winner lookup
+# ---------------------------------------------------------------------------
+class TestAutotuneV2:
+    def test_v1_cache_migrates_blocks_but_not_votes(self, tmp_cache):
+        """A v1 file keeps steering block sizes under the pallas impl key,
+        but its wall_us must NOT survive migration — a stale pallas-only
+        timing would win lookup_impl unopposed."""
+        v1_key = "cpu|elp_bsd_a4|nib|8x512x128"
+        with open(tmp_cache, "w") as f:
+            json.dump(
+                {
+                    "schema_version": 1,
+                    "entries": {
+                        v1_key: {"blocks": [256, 256, 128], "wall_us": 1.0},
+                        "short|key": {"blocks": [128, 128, 128]},  # unmigratable: dropped
+                    },
+                },
+                f,
+            )
+        got = autotune.lookup_blocks(
+            8, 512, 128, fmt_name="elp_bsd_a4", nibble=True, backend="cpu"
+        )
+        assert got == (256, 256, 128)
+        impl, blocks = autotune.lookup_impl(
+            8, 512, 128, fmt_name="elp_bsd_a4", nibble=True, backend="cpu"
+        )
+        assert impl is None and blocks == autotune.DEFAULT_BLOCKS
+        assert "short|key" not in autotune.cache_entries()
+
+    def test_lookup_impl_returns_min_wall_entry(self, tmp_cache):
+        def mk(impl):
+            return autotune.cache_key(4, 2048, 2048, "elp_bsd_a4", True, "cpu", impl=impl)
+        autotune.write_entries(
+            {
+                mk("pallas"): {"blocks": [128, 128, 128], "wall_us": 900.0},
+                mk("pallas_fused"): {"blocks": [128, 256, 128], "wall_us": 120.0},
+                mk("xla"): {"blocks": [128, 128, 128], "wall_us": 150.0},
+            }
+        )
+        impl, blocks = autotune.lookup_impl(
+            4, 2048, 2048, fmt_name="elp_bsd_a4", nibble=True, backend="cpu"
+        )
+        assert impl == "pallas_fused"
+        assert blocks == (128, 256, 128)
+
+    def test_lookup_impl_ignores_entries_without_wall_us(self, tmp_cache):
+        key = autotune.cache_key(4, 64, 64, "elp_bsd_a4", False, "cpu", impl="pallas")
+        autotune.write_entries({key: {"blocks": [128, 128, 128]}})
+        impl, _ = autotune.lookup_impl(
+            4, 64, 64, fmt_name="elp_bsd_a4", nibble=False, backend="cpu"
+        )
+        assert impl is None
+
+    def test_cache_key_impl_segment_and_positional_compat(self):
+        assert autotune.cache_key(1, 2, 3, "f", True, "cpu") == "cpu|pallas|f|nib|1x2x3"
+        assert (
+            autotune.cache_key(1, 2, 3, "f", False, "tpu", impl="pallas_fused")
+            == "tpu|pallas_fused|f|u8|1x2x3"
+        )
+
+    def test_lookup_flash_block_s(self, tmp_cache):
+        key = autotune.flash_cache_key(4, 8, 64, 256, "cpu")
+        autotune.write_entries({key: {"blocks": [1, 64, 1], "wall_us": 5.0}})
+        assert autotune.lookup_flash_block_s(4, 8, 64, 256, backend="cpu") == 64
+        # one-shot sentinel (block_s = 0), non-divisors and >= s read as None
+        for bad in (0, 96, 256, 512):
+            autotune.write_entries({key: {"blocks": [1, bad, 1]}})
+            autotune.invalidate_memory_cache()
+            assert autotune.lookup_flash_block_s(4, 8, 64, 256, backend="cpu") is None
+        assert autotune.lookup_flash_block_s(4, 8, 64, 999, backend="cpu") is None  # miss
+
+    def test_autotune_matmul_ranking_covers_all_impls(self, tmp_cache):
+        res = autotune.autotune_matmul(4, 64, 32, FORMAT_A, iters=1, warmup=1, backend="cpu")
+        raced = {r["impl"] for r in res["ranking"]}
+        assert raced == set(autotune.IMPLS)
+        assert res["impl"] == res["ranking"][0]["impl"]
+        assert res["wall_us"] == min(r["wall_us"] for r in res["ranking"])
 
 
 # ---------------------------------------------------------------------------
@@ -165,6 +258,115 @@ def test_auto_blocks_bit_exact_vs_default(tmp_cache):
     ref = np.asarray(quantized_conv2d(xc, pwc, impl="pallas"))
     got = np.asarray(quantized_conv2d(xc, pwc, impl="pallas", block_sizes="auto"))
     np.testing.assert_array_equal(got, ref)
+
+
+# ---------------------------------------------------------------------------
+# Gate: selected-vs-selected comparison and the same-impl exemption
+# ---------------------------------------------------------------------------
+def test_gate_selected_same_impl_skips_entry_check():
+    """A ``selected`` timing with an unchanged impl votes in the group
+    geomean but is exempt from the single-entry catastrophic check (its
+    wall duplicates the impl's own gated key); an impl FLIP restores
+    the full check."""
+    from repro.bench.__main__ import _collect_ratios, _gate
+
+    def doc(sel_us, sel_impl):
+        return {
+            "entries": {
+                "decode_step_fused/x": {
+                    "workload": "decode_step_fused",
+                    "wall_us": {
+                        "fused": {"min_us": 1000.0},
+                        "selected": {"min_us": sel_us, "impl": sel_impl},
+                    },
+                }
+            },
+            "backend": "cpu",
+        }
+
+    base = doc(1000.0, "pallas_fused")
+    same = _collect_ratios(doc(5000.0, "pallas_fused"), base, 200.0)
+    sel = [r for r in same if r[2] == "selected"]
+    assert len(sel) == 1 and sel[0][6] is False  # in ratios, exempt from entry check
+    assert not any("(entry" in f for f in _gate(same, 0.20))
+
+    flipped = _collect_ratios(doc(5000.0, "xla"), base, 200.0)
+    sel = [r for r in flipped if r[2] == "selected"]
+    assert len(sel) == 1 and sel[0][6] is True
+    assert any("(entry" in f for f in _gate(flipped, 0.20))
+
+
+# ---------------------------------------------------------------------------
+# impl="auto" dispatch: cache winner, conv xla fallback, flash chunking
+# ---------------------------------------------------------------------------
+def test_auto_impl_follows_cache_winner_bit_exact(tmp_cache):
+    """auto == xla on a cold cache (CPU heuristic), and still == xla when
+    the cache elects pallas_fused (its off-TPU form is the same graph)."""
+    if jax.default_backend() == "tpu":
+        pytest.skip("CPU heuristic under test")
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(4, 512)), jnp.float32)
+    pw, _ = pack_weight(jnp.asarray(rng.normal(size=(512, 128)) * 0.05, jnp.float32), FORMAT_A)
+    want = np.asarray(quantized_matmul(x, pw, impl="xla"))
+    got = np.asarray(quantized_matmul(x, pw, impl="auto"))
+    np.testing.assert_array_equal(got, want)
+
+    key = autotune.cache_key(
+        4, 512, 128, "elp_bsd_a4", True, jax.default_backend(), impl="pallas_fused"
+    )
+    autotune.write_entries({key: {"blocks": [128, 128, 128], "wall_us": 1.0}})
+    jax.clear_caches()  # "auto" resolves at trace time
+    got = np.asarray(quantized_matmul(x, pw, impl="auto", block_sizes="auto"))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_conv_auto_falls_back_to_xla_on_cache_miss(tmp_cache):
+    """Untuned conv shapes take impl="xla" — never interpret-mode Pallas."""
+    from repro.kernels.conv import quantized_conv2d
+    from repro.kernels.ops import pack_conv_weight
+
+    rng = np.random.default_rng(3)
+    xc = jnp.asarray(rng.normal(size=(2, 8, 8, 8)), jnp.float32)
+    pwc, _ = pack_conv_weight(
+        jnp.asarray(rng.normal(size=(3, 3, 8, 16)) * 0.1, jnp.float32), FORMAT_A
+    )
+    want = np.asarray(quantized_conv2d(xc, pwc, impl="xla"))
+    got = np.asarray(quantized_conv2d(xc, pwc, impl="auto"))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_flash_decode_chunked_matches_oneshot(tmp_cache):
+    """block_s streaming combine == one-shot slice, and the default
+    block_s=None picks up a tuned chunk from the cache."""
+    from repro.models.context import ParallelCtx
+    from repro.models.flash_decode import flash_decode_attention
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    pctx = ParallelCtx(mesh=mesh, batch_axes=("data",), model_axis="model", flash_decode=True)
+    key = jax.random.PRNGKey(4)
+    b, smax, h, kv, hd = 2, 64, 4, 2, 16
+    q = jax.random.normal(key, (b, 1, h, hd))
+    ck = jax.random.normal(jax.random.PRNGKey(5), (b, smax, kv, hd))
+    cv = jax.random.normal(jax.random.PRNGKey(6), (b, smax, kv, hd))
+    pos = jnp.int32(49)
+    with mesh:
+        oneshot = flash_decode_attention(q, ck, cv, pos, pctx=pctx)  # cold cache: one-shot
+        chunked = flash_decode_attention(q, ck, cv, pos, pctx=pctx, block_s=16)
+    np.testing.assert_allclose(np.asarray(chunked), np.asarray(oneshot), rtol=2e-6, atol=2e-6)
+
+    autotune.write_entries(
+        {
+            autotune.flash_cache_key(b, h, hd, smax, jax.default_backend()): {
+                "blocks": [1, 16, 1],
+                "wall_us": 3.0,
+            }
+        }
+    )
+    jax.clear_caches()
+    assert autotune.lookup_flash_block_s(b, h, hd, smax) == 16
+    with mesh:
+        tuned = flash_decode_attention(q, ck, cv, pos, pctx=pctx)
+    np.testing.assert_allclose(np.asarray(tuned), np.asarray(oneshot), rtol=2e-6, atol=2e-6)
 
 
 def test_explicit_block_sizes_tuple_and_bad_value():

@@ -312,7 +312,7 @@ CFG = ArchConfig(
 STATS_KEYS = {
     "n_slots", "live_slots", "steps", "decode_steps", "prefills",
     "tokens_generated", "requests_completed", "requests_truncated",
-    "mesh", "straggler", "energy_nj_per_token", "cache",
+    "mesh", "straggler", "energy_nj_per_token", "cache", "kernel_dispatch",
 }
 CACHE_KEYS = {
     "layout", "kv_bits", "page_size", "pages_total", "pages_used",
@@ -361,6 +361,8 @@ def test_engine_metrics_and_frozen_stats(params):
     assert set(st["straggler"]) == STRAGGLER_KEYS
     assert set(st["cache"]) == CACHE_KEYS
     assert st["cache"]["layout"] == "dense" and st["cache"]["page_size"] == 0
+    for shape, d in st["kernel_dispatch"].items():  # {} for float params
+        assert set(d) == {"impl", "source", "count"}, shape
 
     total_tokens = sum(n for _, n in reqs)
     h = reg.histograms()

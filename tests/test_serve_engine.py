@@ -208,6 +208,12 @@ def test_packed_decode_consumes_codes_not_dequant(params, packed_params):
     bp = eng_p.decode_cost()["bytes_accessed"]
     bf = eng_f.decode_cost()["bytes_accessed"]
     assert bp < bf, (bp, bf)
+    # dispatch observability: every packed [K, N] shape reports how the
+    # decode-step matmul impl was resolved (stats()["kernel_dispatch"])
+    disp = eng_p.kernel_dispatch()
+    assert disp and all(set(d) == {"impl", "source", "count"} for d in disp.values())
+    assert all(d["source"] in ("structural", "autotuned", "heuristic") for d in disp.values())
+    assert not eng_f.kernel_dispatch()  # float params: nothing packed to dispatch
 
 
 def test_packed_decode_logits_within_quant_tolerance(params):
